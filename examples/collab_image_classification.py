@@ -1,0 +1,60 @@
+"""End-to-end driver (paper's own scenario, Table 1 regime): N=5 clients,
+sparse local data, CoRS vs IL vs FedAvg over many rounds with eval + exact
+communication accounting + checkpointing of every client model.
+
+  PYTHONPATH=src python examples/collab_image_classification.py [--rounds R]
+"""
+import argparse
+import os
+
+import jax
+
+from repro.checkpoint import save_pytree
+from repro.core import client as client_lib, collab
+from repro.data import partition, synthetic
+from repro.models import cnn
+from repro.types import CollabConfig, TrainConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=30)
+    ap.add_argument("--clients", type=int, default=5)
+    ap.add_argument("--mode", default="cors",
+                    choices=["cors", "il", "fd", "fedavg"])
+    ap.add_argument("--lambda-kd", type=float, default=2.0)
+    ap.add_argument("--lambda-disc", type=float, default=1.0)
+    ap.add_argument("--out", default="artifacts/collab_ckpt")
+    args = ap.parse_args()
+
+    x, y = synthetic.class_images(1200, seed=0, noise=0.8)
+    tx, ty = synthetic.class_images(2000, seed=99, noise=0.8)
+    parts = partition.uniform_split(x, y, args.clients, seed=1)
+    print(f"{args.clients} clients × {len(parts[0][0])} samples each, "
+          f"mode={args.mode}")
+
+    spec = client_lib.ClientSpec(
+        apply=lambda p, xx: cnn.apply(p, xx),
+        head=lambda p: (p["head_w"], p["head_b"]))
+    params = [cnn.init_cnn(k) for k in
+              jax.random.split(jax.random.PRNGKey(0), args.clients)]
+    ccfg = CollabConfig(mode=args.mode, num_classes=10, d_feature=84,
+                        lambda_kd=args.lambda_kd,
+                        lambda_disc=args.lambda_disc)
+    trainer = collab.CollabTrainer([spec] * args.clients, params, parts,
+                                   (tx, ty), ccfg, TrainConfig(batch_size=32),
+                                   seed=0)
+    trainer.run(args.rounds, log_every=max(1, args.rounds // 15))
+
+    os.makedirs(args.out, exist_ok=True)
+    for i, c in enumerate(trainer.clients):
+        save_pytree(os.path.join(args.out, f"client{i}.npz"), c.params,
+                    step=args.rounds)
+    best = max(h["acc_mean"] for h in trainer.history)
+    print(f"\nbest mean accuracy: {best:.4f}; "
+          f"total comm {trainer.ledger.total_bytes/1e6:.2f} MB; "
+          f"checkpoints in {args.out}/")
+
+
+if __name__ == "__main__":
+    main()

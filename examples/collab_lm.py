@@ -1,0 +1,110 @@
+"""CoRS across *heterogeneous LM architectures* — the paper's
+model-heterogeneity selling point at LM scale: a (reduced) llama-family
+client and a (reduced) xLSTM client collaborate purely through per-class
+(= per-next-token) feature representations. No weights cross the boundary,
+so the architectures never need to match.
+
+  PYTHONPATH=src python examples/collab_lm.py [--rounds R]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core import losses, prototypes
+from repro.data import synthetic
+from repro.models import lm
+from repro.optim import adam_init, adam_update
+
+VOCAB = 256
+SEQ = 64
+BATCH = 8
+STEPS_PER_ROUND = 8
+
+
+def make_client(arch: str, key):
+    cfg = get_arch(arch).reduced(vocab_size=VOCAB)
+    params = lm.init_lm(key, cfg)
+    return {"cfg": cfg, "params": params, "opt": adam_init(params)}
+
+
+def local_round(client, batches, proto_means, lam_kd, lam_disc, key):
+    cfg = client["cfg"]
+
+    def loss_fn(params, batch, k):
+        out = lm.forward(params, cfg, {"tokens": batch["tokens"]})
+        feats, logits = out["features"], out["logits"]
+        labels = batch["labels"]
+        l_ce = losses.ce_loss(logits, labels)
+        l_kd = losses.kd_loss(feats, proto_means, labels)
+        f = feats.reshape(-1, feats.shape[-1])[:64]
+        y = labels.reshape(-1)[:64]
+        l_disc = losses.disc_loss_sampled(
+            k, f, proto_means, y, params["lm_head"], num_negatives=32,
+            student_logits=logits.reshape(-1, VOCAB)[:64])
+        return l_ce + lam_kd * l_kd + lam_disc * l_disc, (l_ce, feats, labels)
+
+    @jax.jit
+    def step(params, opt, batch, k):
+        (_, (ce, feats, labels)), g = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch, k)
+        params, opt = adam_update(params, g, opt)
+        return params, opt, ce, feats, labels
+
+    stats = prototypes.init_state(VOCAB, cfg.d_model)
+    ce = 0.0
+    for i, batch in enumerate(batches):
+        key, k = jax.random.split(key)
+        client["params"], client["opt"], ce, feats, labels = step(
+            client["params"], client["opt"], batch, k)
+        stats = prototypes.accumulate(stats, feats.reshape(-1, cfg.d_model),
+                                      labels.reshape(-1))
+    return float(ce), stats
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=5)
+    args = ap.parse_args()
+
+    keys = jax.random.split(jax.random.PRNGKey(0), 2)
+    clients = [make_client("tinyllama-1.1b", keys[0]),
+               make_client("xlstm-125m", keys[1])]
+    # NOTE: d_model of both reduced archs must match for shared prototypes;
+    # reduced() gives 256-dim features for both families here.
+    assert clients[0]["cfg"].d_model == clients[1]["cfg"].d_model
+    d = clients[0]["cfg"].d_model
+
+    stream = synthetic.token_stream(100_000, vocab=VOCAB, seed=0)
+    splits = [stream[:50_000], stream[50_000:]]      # private corpora
+
+    global_state = prototypes.init_state(VOCAB, d)
+    key = jax.random.PRNGKey(42)
+    print(f"clients: tinyllama-reduced + xlstm-reduced, vocab={VOCAB}")
+    print("round  ce[llama]  ce[xlstm]  comm_MB/round")
+    for r in range(args.rounds):
+        proto_means = prototypes.means(global_state)
+        round_stats = []
+        ces = []
+        for c, corp in zip(clients, splits):
+            key, k1, k2 = jax.random.split(key, 3)
+            batches = list(synthetic.lm_batches(
+                corp, BATCH, SEQ, STEPS_PER_ROUND,
+                seed=int(jax.random.randint(k1, (), 0, 1 << 30))))
+            batches = [{k: jnp.asarray(v) for k, v in b.items()}
+                       for b in batches]
+            ce, stats = local_round(c, batches, proto_means, 1.0, 0.1, k2)
+            ces.append(ce)
+            round_stats.append(stats)
+        global_state = prototypes.merge(*round_stats)     # the only exchange
+        comm_mb = 2 * 2 * VOCAB * (d + 1) * 4 / 1e6       # up+down, 2 clients
+        print(f"{r + 1:4d}   {ces[0]:.4f}    {ces[1]:.4f}    {comm_mb:.3f}")
+    print("\nheterogeneous-arch collaboration ran end-to-end; the exchanged "
+          "state is (V, d'+1) floats per client per round, independent of "
+          "either model's size.")
+
+
+if __name__ == "__main__":
+    main()

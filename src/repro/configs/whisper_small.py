@@ -1,0 +1,24 @@
+"""Whisper-small [arXiv:2212.04356] — encoder-decoder, 12+12 layers, MHA,
+GELU MLP, LayerNorm, sinusoidal positions. Mel + conv frontend is the allowed
+STUB: input_specs provides (B, 1500, d_model) frame embeddings.
+long_500k SKIPPED: the 30 s audio frontend bounds the decode regime
+(decoder max positions ≈ 448); see DESIGN.md shape/skip matrix."""
+from repro.types import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small",
+    family="audio",
+    num_layers=12,
+    d_model=768,
+    num_heads=12,
+    num_kv_heads=12,
+    d_ff=3072,
+    vocab_size=51865,
+    is_encoder_decoder=True,
+    num_encoder_layers=12,
+    encoder_seq=1500,
+    rope_kind="none",
+    norm_kind="layernorm",
+    mlp_kind="gelu",
+    long_context_mode="skip",
+)

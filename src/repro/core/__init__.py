@@ -1,0 +1,2 @@
+from repro.core import (baselines, client, collab, comm, losses, prototypes,
+                        server)  # noqa: F401

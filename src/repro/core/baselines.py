@@ -1,0 +1,21 @@
+"""Baselines the paper compares against (Table 1): FedAvg aggregation,
+plus helpers shared by IL/CL (which are CollabTrainer modes with no comm)."""
+from __future__ import annotations
+
+from typing import Any, List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def fedavg_aggregate(params_list: Sequence[Any], weights=None):
+    """McMahan et al. 17: weight averaging. Homogeneous models required."""
+    n = len(params_list)
+    if weights is None:
+        weights = [1.0 / n] * n
+    return jax.tree.map(
+        lambda *ps: sum(w * p for w, p in zip(weights, ps)), *params_list)
+
+
+def num_params(params) -> int:
+    return sum(int(p.size) for p in jax.tree.leaves(params))

@@ -1,0 +1,114 @@
+"""LOCALUPDATE (paper Algorithm 2), model-agnostic.
+
+A client is (apply, head): `apply(params, x) -> (features, logits)` and
+`head(params) -> (W, b)` exposing the linear classifier τ_u used by the
+discriminator. Works for the paper's CNNs and for LM adapters alike.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import losses, prototypes
+from repro.optim import adam_update
+from repro.types import CollabConfig, TrainConfig
+
+
+@dataclass(frozen=True)
+class ClientSpec:
+    apply: Callable  # (params, x) -> (features (B,d'), logits (B,C))
+    head: Callable   # params -> (W (d',C), b (C,) | None)
+
+
+def loss_fn(spec: ClientSpec, params, batch, teacher, ccfg: CollabConfig,
+            key=None):
+    """One mini-batch of Algorithm 2's inner loop.
+
+    teacher: dict(global_protos (C,d'), valid_g (C,), obs (M,C,d'),
+    valid_o (C,), obs_pick (int32 scalar: which m to use)) — or None entries
+    for IL/CL/FD modes.
+    """
+    x, y = batch["x"], batch["y"]
+    feats, logits = spec.apply(params, x)
+    l_ce = losses.ce_loss(logits, y)
+    metrics = {"ce": l_ce}
+    total = l_ce
+    if ccfg.mode == "cors":
+        w, b = spec.head(params)
+        l_kd = losses.kd_loss(feats, teacher["global_protos"], y,
+                              valid=teacher["valid_g"])
+        m = teacher.get("obs_pick", 0)
+        obs_m = teacher["obs"][m]                            # (C, d')
+        l_disc = losses.disc_loss(feats, obs_m, y, w, b,
+                                  valid=teacher["valid_o"],
+                                  student_logits=logits)
+        total = total + ccfg.lambda_kd * l_kd + ccfg.lambda_disc * l_disc
+        metrics.update(kd=l_kd, disc=l_disc,
+                       mi_bound=losses.mi_lower_bound(
+                           l_disc, ccfg.num_classes - 1))
+    elif ccfg.mode == "fd":
+        l_fd = losses.fd_loss(logits, teacher["mean_logits"], y,
+                              valid=teacher["valid_g"])
+        total = total + ccfg.lambda_kd * l_fd
+        metrics["fd"] = l_fd
+    metrics["total"] = total
+    return total, metrics
+
+
+def make_local_update(spec: ClientSpec, ccfg: CollabConfig,
+                      tcfg: TrainConfig):
+    """Returns jitted fn(params, opt_state, batches, teacher, key) ->
+    (params, opt_state, metrics). `batches` is a stacked pytree
+    (n_batches, bs, ...) scanned E local epochs (Algorithm 2)."""
+
+    grad_fn = jax.value_and_grad(
+        lambda p, b, t, k: loss_fn(spec, p, b, t, ccfg, k), has_aux=True)
+
+    @jax.jit
+    def run(params, opt_state, batches, teacher, key):
+        n = jax.tree.leaves(batches)[0].shape[0]
+        keys = jax.random.split(key, n * tcfg.local_epochs).reshape(
+            tcfg.local_epochs, n, 2)
+
+        def step(carry, batch_and_key):
+            p, o = carry
+            batch, k = batch_and_key
+            (_, metrics), grads = grad_fn(p, batch, teacher, k)
+            p, o = adam_update(p, grads, o, lr=tcfg.learning_rate,
+                               b1=tcfg.beta1, b2=tcfg.beta2, eps=tcfg.eps)
+            return (p, o), metrics
+
+        def epoch(carry, ek):
+            return jax.lax.scan(step, carry, (batches, ek))
+
+        (params, opt_state), metrics = jax.lax.scan(
+            epoch, (params, opt_state), keys)
+        metrics = jax.tree.map(lambda m: m[-1, -1], metrics)  # last batch
+        return params, opt_state, metrics
+
+    return run
+
+
+def compute_uploads(spec: ClientSpec, params, data_x, data_y,
+                    ccfg: CollabConfig, key):
+    """End-of-round uploads (Algorithm 1): the client's per-class averaged
+    representations (for t̄) and M_↑ observations (for the L_disc buffers).
+    For FD mode, per-class mean logits instead."""
+    feats, logits = spec.apply(params, data_x)
+    state = prototypes.accumulate(
+        prototypes.init_state(ccfg.num_classes, feats.shape[-1]),
+        feats, data_y)
+    obs, valid = prototypes.observations(key, feats, data_y,
+                                         ccfg.num_classes, ccfg.n_avg,
+                                         ccfg.m_up)
+    out = {"proto": state, "obs": obs, "valid": valid}
+    if ccfg.mode == "fd":
+        lstate = prototypes.accumulate(
+            prototypes.init_state(ccfg.num_classes, logits.shape[-1]),
+            logits, data_y)
+        out["logit_proto"] = lstate
+    return out

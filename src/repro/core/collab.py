@@ -1,0 +1,142 @@
+"""Multi-client simulation trainer — the paper's experimental harness.
+
+Runs CoRS and all baselines (CL / IL / FD / FedAvg) with identical data
+partitions, optimizers and round accounting, so benchmarks/table1_utility.py
+reproduces the paper's Table 1 comparison semantics. Clients may have
+heterogeneous architectures in CoRS/FD modes (a selling point of the paper);
+FedAvg requires homogeneous models and asserts so.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines, client as client_lib, comm, server as server_lib
+from repro.optim import adam_init
+from repro.types import CollabConfig, TrainConfig
+
+
+@dataclass
+class ClientState:
+    spec: client_lib.ClientSpec
+    params: Any
+    opt_state: Any
+    data_x: jax.Array
+    data_y: jax.Array
+
+
+class CollabTrainer:
+    def __init__(self, specs: Sequence[client_lib.ClientSpec],
+                 params_list: Sequence[Any],
+                 client_data: Sequence[Tuple[jax.Array, jax.Array]],
+                 test_data: Tuple[jax.Array, jax.Array],
+                 ccfg: CollabConfig, tcfg: TrainConfig, seed: int = 0):
+        assert len(specs) == len(params_list) == len(client_data)
+        self.ccfg, self.tcfg = ccfg, tcfg
+        self.clients = [
+            ClientState(spec=s, params=p, opt_state=adam_init(p),
+                        data_x=x, data_y=y)
+            for s, p, (x, y) in zip(specs, params_list, client_data)]
+        self.test_x, self.test_y = test_data
+        self.server = server_lib.RelayServer(ccfg, ccfg.d_feature, seed)
+        self.ledger = comm.CommLedger()
+        self.key = jax.random.PRNGKey(seed)
+        self._updaters = [client_lib.make_local_update(c.spec, ccfg, tcfg)
+                          for c in self.clients]
+        self.history: List[Dict] = []
+
+    # ------------------------------------------------------------------
+    def _batches(self, c: ClientState):
+        bs = self.tcfg.batch_size
+        n = (c.data_x.shape[0] // bs) * bs
+        xs = c.data_x[:n].reshape(-1, bs, *c.data_x.shape[1:])
+        ys = c.data_y[:n].reshape(-1, bs)
+        return {"x": xs, "y": ys}
+
+    def _nextkey(self):
+        self.key, k = jax.random.split(self.key)
+        return k
+
+    def _empty_teacher(self):
+        C, d = self.ccfg.num_classes, self.ccfg.d_feature
+        return {"global_protos": jnp.zeros((C, d), jnp.float32),
+                "valid_g": jnp.zeros((C,), bool),
+                "obs": jnp.zeros((max(1, self.ccfg.m_down), C, d), jnp.float32),
+                "valid_o": jnp.zeros((C,), bool),
+                "obs_pick": jnp.asarray(0, jnp.int32),
+                "mean_logits": jnp.zeros((C, C), jnp.float32)}
+
+    # ------------------------------------------------------------------
+    def run_round(self) -> Dict:
+        ccfg = self.ccfg
+        mode = ccfg.mode
+        N = len(self.clients)
+        self.server.begin_round()
+        metrics_all = []
+        for i, c in enumerate(self.clients):
+            if mode in ("cors", "fd"):
+                teacher = self.server.relay(i, max(1, ccfg.m_down),
+                                            self._nextkey())
+                t = self._empty_teacher()
+                t.update(teacher)
+                teacher = t
+            else:
+                teacher = self._empty_teacher()
+            c.params, c.opt_state, m = self._updaters[i](
+                c.params, c.opt_state, self._batches(c), teacher,
+                self._nextkey())
+            metrics_all.append(jax.tree.map(float, m))
+            if mode in ("cors", "fd"):
+                payload = client_lib.compute_uploads(
+                    c.spec, c.params, c.data_x, c.data_y, ccfg,
+                    self._nextkey())
+                self.server.upload(i, payload)
+        self.server.end_round()
+
+        if mode == "fedavg":
+            avg = baselines.fedavg_aggregate([c.params for c in self.clients])
+            for c in self.clients:
+                c.params = avg
+            up, down = comm.fedavg_round_floats(
+                baselines.num_params(self.clients[0].params), N)
+        elif mode == "cors":
+            up, down = comm.cors_round_floats(
+                ccfg.num_classes, ccfg.d_feature, ccfg.m_up, ccfg.m_down, N)
+        elif mode == "fd":
+            up, down = comm.fd_round_floats(ccfg.num_classes, N)
+        else:
+            up = down = 0.0
+        self.ledger.log_round(up, down)
+
+        accs = [self.evaluate(c) for c in self.clients]
+        rec = {"round": len(self.history) + 1,
+               "acc_mean": float(np.mean(accs)),
+               "acc_std": float(np.std(accs)),
+               "accs": accs,
+               "metrics": metrics_all,
+               "comm_up": up, "comm_down": down}
+        self.history.append(rec)
+        return rec
+
+    def run(self, rounds: int, log_every: int = 0) -> List[Dict]:
+        for r in range(rounds):
+            rec = self.run_round()
+            if log_every and (r + 1) % log_every == 0:
+                print(f"  round {rec['round']:3d} acc {rec['acc_mean']:.4f}"
+                      f" ±{rec['acc_std']:.4f}")
+        return self.history
+
+    # ------------------------------------------------------------------
+    def evaluate(self, c: ClientState, batch: int = 512) -> float:
+        n = self.test_x.shape[0]
+        correct = 0
+        apply = jax.jit(lambda p, x: c.spec.apply(p, x)[1])
+        for i in range(0, n, batch):
+            lg = apply(c.params, self.test_x[i:i + batch])
+            correct += int(jnp.sum(jnp.argmax(lg, -1)
+                                   == self.test_y[i:i + batch]))
+        return correct / n

@@ -1,0 +1,50 @@
+"""Exact communication accounting (paper §Communication).
+
+Per round and per client, in floats (×4 bytes fp32 on the wire):
+  CoRS uplink   : (M_↑ + 1)·C·d'        (observations + averaged reps)
+  CoRS downlink : (M_↓ + 1)·C·d'        (observations + global prototypes)
+  FD            : C·C each way           (mean logits)
+  FedAvg        : D each way             (the whole model)
+  SL            : n·d' up per epoch      (per-sample smashed data), for the
+                  paper's O() comparison only.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict
+
+BYTES = 4
+
+
+@dataclass
+class CommLedger:
+    up_floats: float = 0.0
+    down_floats: float = 0.0
+    by_round: list = field(default_factory=list)
+
+    def log_round(self, up: float, down: float):
+        self.up_floats += up
+        self.down_floats += down
+        self.by_round.append((up, down))
+
+    @property
+    def total_bytes(self) -> float:
+        return BYTES * (self.up_floats + self.down_floats)
+
+
+def cors_round_floats(C: int, d: int, m_up: int, m_down: int, n_clients: int):
+    up = n_clients * (m_up + 1) * C * d
+    down = n_clients * (m_down + 1) * C * d
+    return up, down
+
+
+def fd_round_floats(C: int, n_clients: int):
+    return n_clients * C * C, n_clients * C * C
+
+
+def fedavg_round_floats(model_size: int, n_clients: int):
+    return n_clients * model_size, n_clients * model_size
+
+
+def sl_epoch_floats(n_samples: int, d: int, n_clients: int):
+    return n_clients * n_samples * d, n_clients * n_samples * d

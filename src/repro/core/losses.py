@@ -1,0 +1,134 @@
+"""The paper's objective (Eq. 6): L = L_CE + λ_KD·L_KD + λ_disc·L_disc.
+
+L_disc implements Eq. (5)/(7): the discriminator ĥ(s,t) =
+⟨softmax(τ_u(s)), softmax(τ_u(t))⟩ built from the model's own classifier
+(NOT an external discriminator — the paper found that crucial), trained as a
+binary classifier of "same class?" with one positive (t^{y_i}) and K
+negatives per sample. Theorem 1: I(Φ_s, Φ_t) ≥ log K − L_disc.
+
+Two regimes:
+  - `disc_loss`      : paper-faithful K = C−1 (every other class is a negative)
+  - `disc_loss_sampled`: K sampled negative classes (LM-scale vocab; the bound
+                         holds for any K, only log K changes)
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-7
+
+
+def ce_loss(logits, labels, mask=None):
+    """Mean cross-entropy. logits (..., C); labels (...) int."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is None:
+        return -jnp.mean(ll)
+    m = mask.astype(jnp.float32)
+    return -jnp.sum(ll * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+def kd_loss(features, global_protos, labels, valid=None, mask=None):
+    """L_KD = E‖s_i − t̄^{y_i}‖² (paper ℓ_KD), mean-per-dim reduction.
+
+    Reduction note: the paper writes ‖x'−x''‖² but calibrates λ_KD = 10 with
+    a PyTorch pipeline where nn.MSELoss averages over feature dims; with a
+    per-dim *sum* the KD gradient is d'× larger, dominates L_CE and collapses
+    training at the paper's λ (verified empirically — see EXPERIMENTS.md
+    §Paper-claims). We use the mean-per-dim form so the paper's λ values
+    transfer."""
+    t = jnp.take(global_protos, labels, axis=0)             # (..., d')
+    d2 = jnp.mean((features.astype(jnp.float32) - t) ** 2, axis=-1)
+    w = jnp.ones_like(d2)
+    if valid is not None:
+        w = w * jnp.take(valid.astype(jnp.float32), labels, axis=0)
+    if mask is not None:
+        w = w * mask.astype(jnp.float32)
+    return jnp.sum(d2 * w) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+def _tau(head_w, head_b, x):
+    z = x.astype(jnp.float32) @ head_w.astype(jnp.float32)
+    if head_b is not None:
+        z = z + head_b.astype(jnp.float32)
+    return z
+
+
+def hhat_matrix(student_logits, teacher_logits):
+    """ĥ(s, t) for all pairs: (B, C_s) softmax  ·  (M, C_s) softmax -> (B, M)."""
+    p = jax.nn.softmax(student_logits.astype(jnp.float32), axis=-1)
+    q = jax.nn.softmax(teacher_logits.astype(jnp.float32), axis=-1)
+    return p @ q.T
+
+
+def disc_loss(features, obs, labels, head_w, head_b=None, valid=None,
+              student_logits=None, use_kernel: bool = False):
+    """Paper-faithful L_disc with K = C−1 (Eq. 7, Algorithm 2).
+
+    features (B, d') student reps; obs (C, d') one downloaded observation per
+    class; labels (B,); head_w (d', C), head_b (C,) — the client's own τ_u.
+    valid (C,): classes with no observation are excluded from both roles.
+    """
+    s_logits = (_tau(head_w, head_b, features)
+                if student_logits is None else student_logits)
+    t_logits = _tau(head_w, head_b, obs)                    # (C, C)
+    if use_kernel:
+        from repro.kernels import ops
+        return ops.disc_loss(s_logits, t_logits, labels, valid)
+    h = hhat_matrix(s_logits, t_logits)                     # (B, C)
+    h = jnp.clip(h, _EPS, 1.0 - _EPS)
+    C = obs.shape[0]
+    pos = jax.nn.one_hot(labels, C, dtype=jnp.float32)      # (B, C)
+    v = jnp.ones((C,), jnp.float32) if valid is None else valid.astype(jnp.float32)
+    # ℓ_disc = −log ĥ(s, t^y) − Σ_{c≠y} log(1 − ĥ(s, t^c))
+    per_pair = -(pos * jnp.log(h) + (1.0 - pos) * jnp.log1p(-h))
+    per_pair = per_pair * v[None, :]
+    sample_valid = jnp.take(v, labels)                      # drop s with no t^y
+    return jnp.sum(per_pair * sample_valid[:, None]) / jnp.maximum(
+        jnp.sum(sample_valid), 1.0)
+
+
+def disc_loss_sampled(key, features, protos, labels, head_w, head_b=None,
+                      num_negatives: int = 1023, student_logits=None):
+    """LM-scale L_disc: K sampled negative classes (shared across the batch).
+
+    protos (C, d') act as the observation bank. Negative classes are drawn
+    uniformly; a sampled class equal to y_i is masked out for that sample
+    (it would be a false negative).
+    """
+    C = protos.shape[0]
+    s_logits = (_tau(head_w, head_b, features)
+                if student_logits is None else student_logits)
+    neg_ids = jax.random.randint(key, (num_negatives,), 0, C)     # (K,)
+    t_pos = jnp.take(protos, labels, axis=0)                      # (B, d')
+    t_neg = jnp.take(protos, neg_ids, axis=0)                     # (K, d')
+    z_pos = _tau(head_w, head_b, t_pos)                           # (B, C)
+    z_neg = _tau(head_w, head_b, t_neg)                           # (K, C)
+    p = jax.nn.softmax(s_logits.astype(jnp.float32), axis=-1)     # (B, C)
+    h_pos = jnp.clip(jnp.sum(p * jax.nn.softmax(z_pos, axis=-1), axis=-1),
+                     _EPS, 1 - _EPS)                              # (B,)
+    h_neg = jnp.clip(p @ jax.nn.softmax(z_neg, axis=-1).T,
+                     _EPS, 1 - _EPS)                              # (B, K)
+    not_self = (neg_ids[None, :] != labels[:, None]).astype(jnp.float32)
+    loss = (-jnp.log(h_pos)
+            - jnp.sum(jnp.log1p(-h_neg) * not_self, axis=-1))
+    return jnp.mean(loss)
+
+
+def mi_lower_bound(disc: jax.Array, K: int) -> jax.Array:
+    """Theorem 1: I(Φ_s, Φ_t) ≥ log K − L_disc."""
+    return jnp.log(jnp.asarray(float(K))) - disc
+
+
+def fd_loss(logits, mean_logits, labels, valid=None):
+    """Federated Distillation baseline (Jeong et al. 18): MSE between the
+    student's logits and the network's per-class mean logits of the label."""
+    t = jnp.take(mean_logits, labels, axis=0)               # (..., C)
+    d2 = jnp.mean((logits.astype(jnp.float32) - t) ** 2, axis=-1)
+    if valid is not None:
+        w = jnp.take(valid.astype(jnp.float32), labels, axis=0)
+        return jnp.sum(d2 * w) / jnp.maximum(jnp.sum(w), 1.0)
+    return jnp.mean(d2)

@@ -1,0 +1,104 @@
+"""Per-class feature-representation statistics (the objects CoRS shares).
+
+Two kinds of shared state (paper §3):
+  - global prototypes  t̄^c : inter-client mean feature per class  (L_KD)
+  - observations       t^c_m: intra-client averages of n_avg same-class
+                              features                              (L_disc)
+
+TPU adaptation: the per-class accumulation is a segment-sum; GPU code would
+scatter-add, the MXU-native form is `one_hot(labels) @ features` (tiled in
+kernels/proto_accum.py; the jnp path below is the oracle and the default).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ProtoState(NamedTuple):
+    """Running per-class sums. sum: (C, d') f32; count: (C,) f32."""
+    sum: jax.Array
+    count: jax.Array
+
+    @property
+    def num_classes(self) -> int:
+        return self.sum.shape[0]
+
+
+def init_state(num_classes: int, d_feature: int) -> ProtoState:
+    return ProtoState(jnp.zeros((num_classes, d_feature), jnp.float32),
+                      jnp.zeros((num_classes,), jnp.float32))
+
+
+def accumulate(state: ProtoState, features, labels,
+               use_kernel: bool = False) -> ProtoState:
+    """features (n, d'); labels (n,) int. Adds per-class sums/counts."""
+    C = state.num_classes
+    feats = features.astype(jnp.float32)
+    if use_kernel:
+        from repro.kernels import ops
+        s, c = ops.proto_accum(feats, labels, C)
+    else:
+        onehot = jax.nn.one_hot(labels, C, dtype=jnp.float32)  # (n, C)
+        s = jnp.einsum("nc,nd->cd", onehot, feats)
+        c = jnp.sum(onehot, axis=0)
+    return ProtoState(state.sum + s, state.count + c)
+
+
+def means(state: ProtoState, fallback: Optional[jax.Array] = None):
+    """-> (C, d') per-class means; classes with zero count get `fallback`
+    rows (default zeros)."""
+    safe = jnp.maximum(state.count, 1.0)[:, None]
+    m = state.sum / safe
+    if fallback is not None:
+        m = jnp.where(state.count[:, None] > 0, m, fallback)
+    return m
+
+
+def merge(*states: ProtoState) -> ProtoState:
+    """Inter-client aggregation (the server's only computation, Alg. 1)."""
+    return ProtoState(sum(s.sum for s in states),
+                      sum(s.count for s in states))
+
+
+def psum_merge(state: ProtoState, axis_name) -> ProtoState:
+    """On-mesh aggregation over the client axis (relay == all-reduce)."""
+    return ProtoState(jax.lax.psum(state.sum, axis_name),
+                      jax.lax.psum(state.count, axis_name))
+
+
+def observations(key, features, labels, num_classes: int, n_avg: int,
+                 m_up: int = 1):
+    """Paper's t^c_m: for each class c, m_up independent averages over
+    n_avg same-class samples.
+
+    features (n, d'); labels (n,). Classes with fewer than n_avg samples
+    average whatever is present (mask-weighted); empty classes yield zero
+    rows and a validity mask.
+
+    Returns obs (m_up, C, d') f32, valid (C,) bool.
+    """
+    n, d = features.shape
+    feats = features.astype(jnp.float32)
+    onehot = jax.nn.one_hot(labels, num_classes, dtype=jnp.float32)  # (n,C)
+
+    def one_obs(k):
+        # random subset per class: weight each sample by a random priority,
+        # keep the n_avg highest per class.
+        prio = jax.random.uniform(k, (n,))
+        # rank of each sample within its class (descending priority)
+        order = jnp.argsort(-prio)
+        ranked_onehot = onehot[order]                       # (n, C)
+        rank_in_class = jnp.cumsum(ranked_onehot, axis=0) * ranked_onehot
+        keep = (rank_in_class > 0) & (rank_in_class <= n_avg)  # (n, C)
+        w = keep.astype(jnp.float32)
+        s = jnp.einsum("nc,nd->cd", w, feats[order])
+        cnt = jnp.maximum(jnp.sum(w, axis=0), 1.0)
+        return s / cnt[:, None]
+
+    keys = jax.random.split(key, m_up)
+    obs = jax.vmap(one_obs)(keys)                           # (m_up, C, d')
+    valid = jnp.sum(onehot, axis=0) > 0
+    return obs, valid

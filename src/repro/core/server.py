@@ -1,0 +1,94 @@
+"""GLOBALUPDATE (paper Algorithm 1) — the relay.
+
+The server's ONLY computation is averaging the clients' per-class averaged
+representations into global prototypes; observations are stored in per-class
+buffers, shuffled, and relayed. It never touches model weights (contrast
+FedAvg), which is what makes the scheme tunable/decentralizable — `relay()`
+below is trivially replaceable by a peer-to-peer exchange, and the on-mesh
+distributed path (launch/train.py) replaces it with a single all-reduce.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import prototypes
+from repro.types import CollabConfig
+
+
+class RelayServer:
+    def __init__(self, ccfg: CollabConfig, d_feature: int, seed: int = 0):
+        self.ccfg = ccfg
+        self.d = d_feature
+        self.rng = np.random.default_rng(seed)
+        C = ccfg.num_classes
+        # Paper Algorithm 1: S initializes randomly {t̄^c} and the observation
+        # buffers. The random initial prototypes are load-bearing: they are a
+        # COMMON anchor that aligns the clients' (independently initialized)
+        # feature spaces in round 1, so that inter-client averaging of
+        # per-class means is meaningful from round 2 on. Without it, averaging
+        # across unaligned feature spaces cancels class structure and L_KD
+        # collapses the model (verified empirically; see tests).
+        self.global_state = prototypes.init_state(C, d_feature)
+        self.global_protos = jnp.asarray(
+            self.rng.normal(size=(C, d_feature)).astype(np.float32) * 0.01)
+        self.valid_g = jnp.ones((C,), bool)
+        self.obs_buffer: List[Dict] = [
+            {"obs": jnp.asarray(self.rng.normal(size=(C, d_feature))
+                                .astype(np.float32) * 0.01),
+             "valid": jnp.ones((C,), bool), "owner": -1}
+            for _ in range(max(1, ccfg.m_down))]
+        self.logit_state = None            # FD mode
+
+    # -- uplink ------------------------------------------------------------
+    def upload(self, client_id: int, payload: Dict):
+        self.round_states.append(payload["proto"])
+        for m in range(payload["obs"].shape[0]):
+            self.obs_buffer.append({"obs": payload["obs"][m],
+                                    "valid": payload["valid"],
+                                    "owner": client_id})
+        if "logit_proto" in payload:
+            self.round_logit_states.append(payload["logit_proto"])
+
+    def begin_round(self):
+        self.round_states = []
+        self.round_logit_states = []
+
+    def end_round(self):
+        if self.round_states:
+            merged = prototypes.merge(*self.round_states)
+            self.global_protos = prototypes.means(merged)
+            self.valid_g = merged.count > 0
+        if self.round_logit_states:
+            lm = prototypes.merge(*self.round_logit_states)
+            self.mean_logits = prototypes.means(lm)
+        # keep the buffer bounded (paper: class buffers, shuffled)
+        self.rng.shuffle(self.obs_buffer)
+        cap = 4 * max(1, len(self.round_states)) * self.ccfg.m_up
+        self.obs_buffer = self.obs_buffer[-cap * 8:]
+
+    # -- downlink ----------------------------------------------------------
+    def relay(self, client_id: int, m_down: int, key) -> Dict:
+        """Observations of OTHER users, chosen at random (paper §4:
+        'downloads the representations of another user chosen at random')."""
+        pool = [o for o in self.obs_buffer if o["owner"] != client_id]
+        if not pool:
+            pool = self.obs_buffer or [{
+                "obs": jnp.zeros((self.ccfg.num_classes, self.d), jnp.float32),
+                "valid": jnp.zeros((self.ccfg.num_classes,), bool)}]
+        picks = [pool[self.rng.integers(len(pool))] for _ in range(m_down)]
+        obs = jnp.stack([p["obs"] for p in picks])           # (M, C, d')
+        valid = jnp.stack([p["valid"] for p in picks]).all(axis=0)
+        teacher = {"global_protos": self.global_protos,
+                   "valid_g": self.valid_g,
+                   "obs": obs, "valid_o": valid,
+                   "obs_pick": jnp.asarray(
+                       self.rng.integers(m_down), jnp.int32)}
+        if self.logit_state is not None or hasattr(self, "mean_logits"):
+            teacher["mean_logits"] = getattr(
+                self, "mean_logits",
+                jnp.zeros((self.ccfg.num_classes, self.ccfg.num_classes)))
+        return teacher

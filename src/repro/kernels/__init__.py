@@ -1,0 +1,1 @@
+from repro.kernels import disc_loss, flash_attention, ops, proto_accum, ref  # noqa: F401

@@ -1,0 +1,112 @@
+"""Pallas TPU kernel: fused CoRS discriminator loss (Eq. 7) at vocab scale.
+
+Computes, per student sample i:
+    h[i, m] = < softmax(s_logits[i]), q[m] >        (q = teacher probs)
+    loss[i] = -log h[i, y_i] - sum_{m != y_i, valid} log(1 - h[i, m])
+
+without ever materializing softmax(s_logits) in HBM: the class axis C is
+tiled; a flash-style running (max, denom, h_acc) rescale folds each class
+tile into the unnormalized inner products. Grid (b_blocks, c_blocks), the
+trailing class axis sequential; h_acc (block_b, M) lives in VMEM scratch and
+the BCE reduce happens on the last class tile.
+
+This is the LM-scale hot spot of the paper's objective: at C = 152k and
+M = 1k observations, the naive path writes a (B, C) probability matrix per
+loss term; the fused kernel keeps everything in VMEM tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_EPS = 1e-7
+NEG_INF = -1e30
+
+
+def _kernel(s_ref, q_ref, y_ref, v_ref, loss_ref, m_scr, z_scr, h_scr, *,
+            block_b: int, block_c: int, M: int):
+    ci = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        z_scr[...] = jnp.zeros_like(z_scr)
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    s = s_ref[...].astype(jnp.float32)                       # (bb, bc)
+    q = q_ref[...].astype(jnp.float32)                       # (M, bc)
+    m_prev = m_scr[...]                                      # (bb, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p_un = jnp.exp(s - m_new)                                # unnormalized
+    alpha = jnp.exp(m_prev - m_new)
+    z_scr[...] = z_scr[...] * alpha + jnp.sum(p_un, axis=1, keepdims=True)
+    h_scr[...] = h_scr[...] * alpha + jax.lax.dot_general(
+        p_un, q, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                  # (bb, M)
+    m_scr[...] = m_new
+
+    @pl.when(ci == nc - 1)
+    def _finish():
+        h = h_scr[...] / jnp.maximum(z_scr[...], 1e-30)      # (bb, M)
+        h = jnp.clip(h, _EPS, 1.0 - _EPS)
+        y = y_ref[0]                                         # (bb,)
+        valid = v_ref[0].astype(jnp.float32)                 # (M,)
+        mids = jax.lax.broadcasted_iota(jnp.int32, (block_b, M), 1)
+        pos = (mids == y[:, None]).astype(jnp.float32)
+        per = -(pos * jnp.log(h) + (1.0 - pos) * jnp.log1p(-h))
+        per = per * valid[None, :]
+        loss_ref[...] = jnp.sum(per, axis=1, keepdims=True)
+
+
+def disc_loss(student_logits, teacher_probs, labels, valid=None, *,
+              block_b: int = 256, block_c: int = 512,
+              interpret: bool = False):
+    """student_logits (B, C); teacher_probs (M, C) (rows softmaxed);
+    labels (B,) int32 in [0, M); valid (M,) bool. -> per-sample loss (B,)."""
+    B, C = student_logits.shape
+    M = teacher_probs.shape[0]
+    if valid is None:
+        valid = jnp.ones((M,), jnp.float32)
+    block_b = min(block_b, B)
+    block_c = min(block_c, C)
+    b_pad = (-B) % block_b
+    c_pad = (-C) % block_c
+    if b_pad:
+        student_logits = jnp.pad(student_logits, ((0, b_pad), (0, 0)))
+        labels = jnp.pad(labels, (0, b_pad))
+    if c_pad:
+        # pad class axis with -inf student logits / zero teacher probs:
+        # contributes nothing to softmax or inner products
+        student_logits = jnp.pad(student_logits, ((0, 0), (0, c_pad)),
+                                 constant_values=NEG_INF)
+        teacher_probs = jnp.pad(teacher_probs, ((0, 0), (0, c_pad)))
+    Bp, Cp = student_logits.shape
+    labels = labels.astype(jnp.int32)
+
+    grid = (Bp // block_b, Cp // block_c)
+    kern = functools.partial(_kernel, block_b=block_b, block_c=block_c, M=M)
+    loss = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_c), lambda bi, ci: (bi, ci)),
+            pl.BlockSpec((M, block_c), lambda bi, ci: (0, ci)),
+            pl.BlockSpec((1, block_b), lambda bi, ci: (0, bi)),
+            pl.BlockSpec((1, M), lambda bi, ci: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, 1), lambda bi, ci: (bi, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, 1), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((block_b, 1), jnp.float32),
+            pltpu.VMEM((block_b, 1), jnp.float32),
+            pltpu.VMEM((block_b, M), jnp.float32),
+        ],
+        interpret=interpret,
+    )(student_logits, teacher_probs, labels[None, :],
+      valid.astype(jnp.float32)[None, :])
+    return loss[:B, 0]

@@ -1,0 +1,48 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+Backend dispatch: on TPU the Pallas kernels run compiled; everywhere else
+(this CPU container, dry-run lowering) they run via the pure-jnp oracles in
+ref.py (identical math), or in interpret mode when `interpret=True` is forced
+(kernel correctness tests). This keeps `use_kernel=True` call sites portable.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import disc_loss as _dl
+from repro.kernels import flash_attention as _fa
+from repro.kernels import proto_accum as _pa
+from repro.kernels import ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, interpret: bool = False):
+    if interpret or _on_tpu():
+        return _fa.flash_attention(q, k, v, causal=causal,
+                                   interpret=interpret or not _on_tpu())
+    return ref.flash_attention(q, k, v, causal=causal)
+
+
+@partial(jax.jit, static_argnames=("num_classes", "interpret"))
+def proto_accum(features, labels, num_classes: int, *,
+                interpret: bool = False):
+    if interpret or _on_tpu():
+        return _pa.proto_accum(features, labels, num_classes,
+                               interpret=interpret or not _on_tpu())
+    return ref.proto_accum(features, labels, num_classes)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def disc_loss(student_logits, teacher_probs, labels, valid=None, *,
+              interpret: bool = False):
+    if interpret or _on_tpu():
+        return _dl.disc_loss(student_logits, teacher_probs, labels, valid,
+                             interpret=interpret or not _on_tpu())
+    return ref.disc_loss(student_logits, teacher_probs, labels, valid)

@@ -1,0 +1,79 @@
+"""Pallas TPU kernel: per-class feature accumulation (CoRS prototype stats).
+
+GPU implementations scatter-add features into rows indexed by label; TPU has
+no fast scatter, so the MXU-native reformulation builds a (block_n × block_c)
+one-hot tile from the label block via iota-compare and accumulates
+`one_hot.T @ features` — a dense matmul per tile. Grid (c_blocks, n_blocks):
+the trailing n axis is sequential on TPU, so the (block_c, d) output tile
+accumulates across n iterations in place.
+
+Counts are the same contraction against a ones-vector (fused: we append a
+ones column to the feature tile).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(labels_ref, feats_ref, sum_ref, cnt_ref, *, block_c: int,
+            block_n: int):
+    ci = pl.program_id(0)
+    ni = pl.program_id(1)
+
+    @pl.when(ni == 0)
+    def _init():
+        sum_ref[...] = jnp.zeros_like(sum_ref)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    labels = labels_ref[0]                                   # (block_n,)
+    feats = feats_ref[...].astype(jnp.float32)               # (block_n, d)
+    class_ids = ci * block_c + jax.lax.broadcasted_iota(
+        jnp.int32, (block_n, block_c), 1)
+    onehot = (labels[:, None] == class_ids).astype(jnp.float32)
+    sum_ref[...] += jax.lax.dot_general(
+        onehot, feats, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                  # (block_c, d)
+    cnt_ref[...] += jnp.sum(onehot, axis=0, keepdims=True).T  # (block_c, 1)
+
+
+def proto_accum(features, labels, num_classes: int, *, block_n: int = 512,
+                block_c: int = 256, interpret: bool = False):
+    """features (n, d); labels (n,) int32 -> (sums (C, d) f32, counts (C,) f32).
+
+    n is padded to block_n with an out-of-range label (contributes nowhere);
+    C is padded to block_c and cropped.
+    """
+    n, d = features.shape
+    block_n = min(block_n, max(8, n))
+    block_c = min(block_c, num_classes)
+    n_pad = (-n) % block_n
+    c_pad = (-num_classes) % block_c
+    C = num_classes + c_pad
+    if n_pad:
+        features = jnp.pad(features, ((0, n_pad), (0, 0)))
+        labels = jnp.pad(labels, (0, n_pad), constant_values=-1)
+    labels = labels.astype(jnp.int32)
+    npad = n + n_pad
+
+    grid = (C // block_c, npad // block_n)
+    kern = functools.partial(_kernel, block_c=block_c, block_n=block_n)
+    sums, cnts = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_n), lambda ci, ni: (0, ni)),
+            pl.BlockSpec((block_n, d), lambda ci, ni: (ni, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_c, d), lambda ci, ni: (ci, 0)),
+            pl.BlockSpec((block_c, 1), lambda ci, ni: (ci, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((C, d), jnp.float32),
+                   jax.ShapeDtypeStruct((C, 1), jnp.float32)],
+        interpret=interpret,
+    )(labels[None, :], features)
+    return sums[:num_classes], cnts[:num_classes, 0]

@@ -1,0 +1,164 @@
+"""Serving steps: prefill (build KV caches + first logits) and decode (one
+token against a seq_len cache) — what the decode_32k / long_500k dry-run
+shapes lower. CoRS is a training-time technique; serving is the plain model,
+so these steps carry no prototype traffic.
+
+Cache sharding: batch over "data" when divisible; otherwise (long_500k,
+B=1) the cache *sequence* axis is sharded over "data". KV heads shard over
+"model" when divisible, else head_dim, else replicated (sharding.head_axis_plan).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import sharding
+from repro.models import blocks, encdec, lm
+from repro.types import ModelConfig, ShapeConfig
+
+
+def decode_window(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    """Effective attention cache length for this shape (sliding-window
+    variant for long_500k on attention archs; DESIGN.md skip matrix)."""
+    if shape.seq_len >= 1 << 19 and cfg.long_context_mode == "swa":
+        return cfg.swa_window
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        if cfg.is_encoder_decoder:
+            enc = encdec.encode(params, cfg, batch["frames"])
+            out = encdec.decode_forward(params, cfg, batch["tokens"], enc,
+                                        mode="prefill")
+        else:
+            out = lm.forward(params, cfg, batch, mode="prefill")
+        return {"logits": out["logits"][:, -1:, :], "caches": out["caches"]}
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, *, window: int = 0):
+    def decode_step(params, batch, caches):
+        if cfg.is_encoder_decoder:
+            out = encdec.decode_forward(
+                params, cfg, batch["tokens"], None, mode="decode",
+                self_cache=caches["self"], cross_kv=caches["cross"])
+            return {"logits": out["logits"], "caches": out["caches"]}
+        out = lm.decode_step(params, cfg, batch, caches, window=window)
+        return {"logits": out["logits"], "caches": out["caches"]}
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs
+# ---------------------------------------------------------------------------
+def params_shapes(cfg: ModelConfig):
+    def init():
+        key = jax.random.PRNGKey(0)
+        return (encdec.init_encdec(key, cfg) if cfg.is_encoder_decoder
+                else lm.init_lm(key, cfg))
+    return jax.eval_shape(init)
+
+
+def serve_batch_specs(cfg: ModelConfig, shape: ShapeConfig):
+    sds = jax.ShapeDtypeStruct
+    B = shape.global_batch
+    S = shape.seq_len if shape.mode == "prefill" else 1
+    batch: Dict[str, Any] = {}
+    if cfg.input_kind == "tokens" or cfg.is_encoder_decoder:
+        batch["tokens"] = sds((B, S), jnp.int32)
+    else:
+        batch["embeddings"] = sds((B, S, cfg.d_model), jnp.dtype(cfg.dtype))
+        if cfg.rope_kind == "mrope":
+            batch["positions"] = sds((B, S, 3), jnp.int32)
+    if cfg.is_encoder_decoder and shape.mode == "prefill":
+        batch["frames"] = sds((B, cfg.encoder_seq, cfg.d_model),
+                              jnp.dtype(cfg.dtype))
+    return batch
+
+
+def cache_shapes(cfg: ModelConfig, shape: ShapeConfig):
+    window = decode_window(cfg, shape)
+    if cfg.is_encoder_decoder:
+        def init():
+            self_c = encdec.init_self_cache(cfg, shape.global_batch,
+                                            shape.seq_len)
+            L = cfg.num_layers
+            z = lambda hd: jnp.zeros((L, shape.global_batch, cfg.encoder_seq,
+                                      cfg.num_kv_heads, hd),
+                                     jnp.dtype(cfg.dtype))
+            return {"self": self_c, "cross": (z(cfg.head_dim),
+                                              z(cfg.v_head_dim))}
+        return jax.eval_shape(init)
+    return jax.eval_shape(
+        lambda: lm.init_cache(cfg, shape.global_batch, shape.seq_len,
+                              window=window))
+
+
+# ---------------------------------------------------------------------------
+# shardings
+# ---------------------------------------------------------------------------
+def params_shardings(pshapes, cfg: ModelConfig, mesh):
+    flat = jax.tree_util.tree_flatten_with_path(pshapes)
+    leaves = []
+    for kp, leaf in flat[0]:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in kp)
+        # serving: no FSDP (weights stay resident); TP over model axis only
+        spec = sharding.param_spec(path, leaf.shape, mesh, fsdp=False)
+        leaves.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(flat[1], leaves)
+
+
+def _cache_leaf_spec(shape, cfg: ModelConfig, mesh, batch: int,
+                     shard_seq: bool):
+    """Heuristic spec for a stacked cache leaf (leading layer axis)."""
+    dp = sharding.dp_axes(mesh)
+    tp = sharding.axis_size(mesh, "model")
+    nd = len(shape)
+    spec = [None] * nd
+    # find the batch dim (first dim == batch after the layer axis)
+    bdim = 1 if nd >= 2 and shape[1] == batch else None
+    if bdim is not None and not shard_seq:
+        if batch % sharding.dp_size(mesh) == 0:
+            spec[bdim] = dp if len(dp) > 1 else dp[0]
+    if shard_seq and nd >= 3:
+        # long-context: shard the sequence axis (dim 2) over data
+        if shape[2] % sharding.dp_size(mesh) == 0:
+            spec[2] = dp if len(dp) > 1 else dp[0]
+    # shard a trailing "heads-like" or feature dim over model
+    for d in range(nd - 2, 1, -1):
+        if spec[d] is None and shape[d] % tp == 0 and shape[d] >= tp:
+            spec[d] = "model"
+            break
+    else:
+        if nd >= 2 and spec[-1] is None and shape[-1] % tp == 0 \
+                and shape[-1] >= tp:
+            spec[-1] = "model"
+    return P(*spec)
+
+
+def cache_shardings(cshapes, cfg: ModelConfig, mesh, shape: ShapeConfig):
+    shard_seq = shape.global_batch < sharding.dp_size(mesh)
+    return jax.tree.map(
+        lambda l: NamedSharding(
+            mesh, _cache_leaf_spec(l.shape, cfg, mesh, shape.global_batch,
+                                   shard_seq)),
+        cshapes)
+
+
+def batch_shardings(bshapes, mesh):
+    def leaf(l):
+        if l.shape[0] % sharding.dp_size(mesh) == 0:
+            dp = sharding.dp_axes(mesh)
+            lead = dp if len(dp) > 1 else dp[0]
+            return NamedSharding(mesh, P(lead, *([None] * (len(l.shape) - 1))))
+        return NamedSharding(mesh, P(*([None] * len(l.shape))))
+    return jax.tree.map(leaf, bshapes)

@@ -1,0 +1,292 @@
+"""Distributed CoRS training step (the paper's technique on the mesh).
+
+Client semantics on the mesh: parameters carry a leading `clients` axis
+sharded over "pod"; `jax.vmap` over that axis gives every pod its own
+client — per-client forward/backward/Adam with NO cross-pod gradient
+traffic. The ONLY cross-pod collective in CoRS mode is the prototype
+merge (mean of per-client per-class feature sums: an all-reduce of
+(C, d'+1) floats), which is exactly the paper's communication claim, now
+visible in the compiled HLO and measured by launch/roofline.py.
+
+Baselines compile from the same builder:
+  mode="fedavg": adds a per-step parameter all-reduce over clients (O(D)).
+  mode="il"    : no cross-client collective at all.
+
+Single-pod mesh: clients=1, same code (the vmap axis is size 1).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import sharding
+from repro.core import losses, prototypes
+from repro.models import encdec, lm
+from repro.optim import adam_init, adam_update
+from repro.types import CollabConfig, ModelConfig, ShapeConfig
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any
+    proto: prototypes.ProtoState
+    step: jax.Array
+
+
+# ---------------------------------------------------------------------------
+# per-client loss
+# ---------------------------------------------------------------------------
+def _lm_outputs(cfg: ModelConfig, params, batch):
+    if cfg.is_encoder_decoder:
+        enc = encdec.encode(params, cfg, batch["frames"])
+        out = encdec.decode_forward(params, cfg, batch["tokens"], enc,
+                                    mode="train")
+    else:
+        out = lm.forward(params, cfg, batch, mode="train")
+    return out
+
+
+def _head_w(cfg: ModelConfig, params):
+    w = params.get("lm_head")
+    if w is None:
+        w = params["embed"].T
+    return w
+
+
+def make_loss_fn(cfg: ModelConfig, ccfg: CollabConfig, *,
+                 disc_tokens: int = 8192):
+    """Per-client loss: Eq. (6) adapted to LM classification (class = next
+    token). L_disc uses K sampled negatives on a token subsample (LM-scale
+    adaptation, DESIGN.md §3)."""
+
+    def loss_fn(params, batch, proto_means, key):
+        out = _lm_outputs(cfg, params, batch)
+        feats, logits = out["features"], out["logits"]
+        labels = batch["labels"]
+        l_ce = losses.ce_loss(logits, labels)
+        metrics = {"ce": l_ce}
+        total = l_ce + 0.01 * out["aux"]
+        if ccfg.mode == "cors":
+            l_kd = losses.kd_loss(feats, proto_means, labels)
+            d = feats.shape[-1]
+            f_flat = feats.reshape(-1, d)
+            y_flat = labels.reshape(-1)
+            T = min(disc_tokens, f_flat.shape[0])
+            k1, _ = jax.random.split(key)
+            l_disc = losses.disc_loss_sampled(
+                k1, f_flat[:T], proto_means, y_flat[:T],
+                _head_w(cfg, params), None,
+                num_negatives=min(ccfg.num_negatives or 1023,
+                                  cfg.vocab_size - 1),
+                student_logits=logits.reshape(-1, cfg.vocab_size)[:T])
+            total = total + ccfg.lambda_kd * l_kd + ccfg.lambda_disc * l_disc
+            metrics.update(kd=l_kd, disc=l_disc)
+        metrics["total"] = total
+        return total, (metrics, feats, labels)
+
+    return loss_fn
+
+
+# ---------------------------------------------------------------------------
+# the train step
+# ---------------------------------------------------------------------------
+def make_train_step(cfg: ModelConfig, ccfg: CollabConfig, *,
+                    n_clients: int = 1, lr: float = 1e-3,
+                    disc_tokens: int = 8192, client_axis: str = "pod",
+                    sync_in_step: bool = True):
+    """sync_in_step=False is the paper-faithful cadence: Algorithm 1
+    exchanges prototypes once per ROUND, not per step — the step then only
+    accumulates local stats and `make_round_sync()` does the merge. The
+    default True folds the exchange into every step (worst case; what the
+    naive port of the algorithm to synchronous SPMD would do)."""
+    loss_fn = make_loss_fn(cfg, ccfg, disc_tokens=disc_tokens)
+    C = cfg.vocab_size
+
+    def client_step(params, opt, batch, proto_means, key):
+        (_, (metrics, feats, labels)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch, proto_means, key)
+        params, opt = adam_update(params, grads, opt, lr=lr)
+        # per-class feature stats of this client's batch (paper's uplink)
+        stats = prototypes.accumulate(
+            prototypes.init_state(C, feats.shape[-1]),
+            feats.reshape(-1, feats.shape[-1]), labels.reshape(-1))
+        return params, opt, stats, metrics
+
+    def train_step(state: TrainState, batch, key):
+        proto_means = prototypes.means(state.proto)
+        keys = jax.random.split(key, n_clients)
+        params, opt, stats, metrics = jax.vmap(
+            client_step, in_axes=(0, 0, 0, None, 0))(
+                state.params, state.opt, batch, proto_means, keys)
+        if ccfg.mode == "fedavg":
+            # baseline: per-step O(D) weight averaging across clients
+            params = jax.tree.map(
+                lambda p: jnp.broadcast_to(jnp.mean(p, axis=0,
+                                                    dtype=jnp.float32)
+                                           .astype(p.dtype), p.shape),
+                params)
+        if ccfg.mode in ("cors", "fd") and sync_in_step:
+            # the paper's exchange: inter-client merge of per-class stats
+            merged = prototypes.ProtoState(
+                jnp.sum(stats.sum, axis=0), jnp.sum(stats.count, axis=0))
+            decay = ccfg.proto_momentum or 1.0
+            proto = prototypes.ProtoState(
+                decay * state.proto.sum + merged.sum,
+                decay * state.proto.count + merged.count)
+        else:
+            proto = state.proto
+        metrics = jax.tree.map(lambda m: jnp.mean(m), metrics)
+        return TrainState(params, opt, proto, state.step + 1), metrics
+
+    return train_step
+
+
+def make_round_sync(ccfg: CollabConfig):
+    """Per-round prototype exchange (paper Algorithm 1 cadence): merge the
+    clients' accumulated stats into the shared ProtoState. Run once per
+    round when the step was built with sync_in_step=False."""
+    def round_sync(state: TrainState, client_stats: prototypes.ProtoState):
+        merged = prototypes.ProtoState(
+            jnp.sum(client_stats.sum, axis=0),
+            jnp.sum(client_stats.count, axis=0))
+        decay = ccfg.proto_momentum or 1.0
+        return state._replace(proto=prototypes.ProtoState(
+            decay * state.proto.sum + merged.sum,
+            decay * state.proto.count + merged.count))
+    return round_sync
+
+
+# ---------------------------------------------------------------------------
+# state/batch construction (real arrays or ShapeDtypeStructs)
+# ---------------------------------------------------------------------------
+def init_state_shapes(cfg: ModelConfig, n_clients: int = 1):
+    """abstract TrainState via eval_shape (no allocation — dry-run path)."""
+    def init():
+        key = jax.random.PRNGKey(0)
+        if cfg.is_encoder_decoder:
+            p = encdec.init_encdec(key, cfg)
+        else:
+            p = lm.init_lm(key, cfg)
+        opt = adam_init(p)
+        bc = lambda a: jnp.broadcast_to(a[None], (n_clients,) + a.shape)
+        return TrainState(jax.tree.map(bc, p), jax.tree.map(bc, opt),
+                          prototypes.init_state(cfg.vocab_size,
+                                                cfg.d_feature),
+                          jnp.zeros((), jnp.int32))
+    return jax.eval_shape(init)
+
+
+def init_state(cfg: ModelConfig, key, n_clients: int = 1) -> TrainState:
+    if cfg.is_encoder_decoder:
+        ps = [encdec.init_encdec(k, cfg)
+              for k in jax.random.split(key, n_clients)]
+    else:
+        ps = [lm.init_lm(k, cfg) for k in jax.random.split(key, n_clients)]
+    p = jax.tree.map(lambda *xs: jnp.stack(xs), *ps)
+    opt = jax.tree.map(lambda *xs: jnp.stack(xs),
+                       *[adam_init(pp) for pp in ps])
+    return TrainState(p, opt,
+                      prototypes.init_state(cfg.vocab_size, cfg.d_feature),
+                      jnp.zeros((), jnp.int32))
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig,
+                      n_clients: int = 1):
+    """ShapeDtypeStructs for one global train batch."""
+    Bc = shape.global_batch // n_clients
+    S = shape.seq_len
+    N = n_clients
+    sds = jax.ShapeDtypeStruct
+    batch: Dict[str, Any] = {
+        "labels": sds((N, Bc, S), jnp.int32)}
+    if cfg.input_kind == "tokens":
+        batch["tokens"] = sds((N, Bc, S), jnp.int32)
+    else:
+        batch["embeddings"] = sds((N, Bc, S, cfg.d_model), jnp.dtype(cfg.dtype))
+        if cfg.rope_kind == "mrope":
+            batch["positions"] = sds((N, Bc, S, 3), jnp.int32)
+    if cfg.is_encoder_decoder:
+        batch["tokens"] = sds((N, Bc, S), jnp.int32)
+        batch["frames"] = sds((N, Bc, cfg.encoder_seq, cfg.d_model),
+                              jnp.dtype(cfg.dtype))
+    return batch
+
+
+# ---------------------------------------------------------------------------
+# shardings
+# ---------------------------------------------------------------------------
+def _client_lead(mesh, n_clients: int):
+    return "pod" if (n_clients > 1 and "pod" in mesh.axis_names) else None
+
+
+def state_shardings(state_shapes, cfg: ModelConfig, mesh, n_clients: int = 1,
+                    *, strategy: str = "tp"):
+    """strategy:
+      "tp"      (default) model axis = tensor parallel
+      "dp_only" params replicated; the model axis becomes extra data
+                parallelism — no per-layer activation all-reduces
+      "zero1"   dp_only + Adam moments sharded over the flattened
+                (data, model) axes (ZeRO-1: replicated-params memory without
+                replicated-optimizer memory)"""
+    lead = _client_lead(mesh, n_clients)
+    flat_dp = sharding.dp_size(mesh) * sharding.axis_size(mesh, "model")
+
+    def param_leaf(path, leaf):
+        if strategy in ("dp_only", "zero1"):
+            inner = [None] * (len(leaf.shape) - 1)
+        else:
+            inner = sharding.param_spec(path, leaf.shape[1:], mesh,
+                                        fsdp=cfg.fsdp)
+        return NamedSharding(mesh, P(lead, *inner))
+
+    def opt_leaf(path, leaf):
+        if strategy == "zero1":
+            dims = leaf.shape[1:]
+            spec = [None] * len(dims)
+            for i, dsz in enumerate(dims):
+                if dsz % flat_dp == 0 and dsz >= flat_dp:
+                    axes = tuple(a for a in ("data", "model")
+                                 if a in mesh.axis_names)
+                    spec[i] = axes if len(axes) > 1 else axes[0]
+                    break
+            return NamedSharding(mesh, P(lead, *spec))
+        return param_leaf(path, leaf)
+
+    def spec_tree(tree, leaf_fn):
+        flat = jax.tree_util.tree_flatten_with_path(tree)
+        leaves = []
+        for kp, leaf in flat[0]:
+            path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                            for k in kp)
+            leaves.append(leaf_fn(path, leaf))
+        return jax.tree_util.tree_unflatten(flat[1], leaves)
+
+    params_sh = spec_tree(state_shapes.params, param_leaf)
+    opt_sh = type(state_shapes.opt)(
+        NamedSharding(mesh, P(lead)),
+        spec_tree(state_shapes.opt.m, opt_leaf),
+        spec_tree(state_shapes.opt.v, opt_leaf))
+    tp = sharding.axis_size(mesh, "model")
+    shard_v = strategy != "dp_only" and cfg.vocab_size % tp == 0
+    proto_spec = P("model", None) if shard_v else P(None, None)
+    cnt_spec = P("model") if shard_v else P(None)
+    proto_sh = prototypes.ProtoState(NamedSharding(mesh, proto_spec),
+                                     NamedSharding(mesh, cnt_spec))
+    return TrainState(params_sh, opt_sh, proto_sh,
+                      NamedSharding(mesh, P()))
+
+
+def batch_shardings(batch_shapes, mesh, n_clients: int = 1, *,
+                    strategy: str = "tp"):
+    lead = _client_lead(mesh, n_clients)
+    baxes = ("data", "model") if strategy in ("dp_only", "zero1") else "data"
+
+    def leaf(l):
+        # (N, Bc, ...) -> client over pod, batch over data (+model: dp_only)
+        rest = (None,) * (len(l.shape) - 2)
+        return NamedSharding(mesh, P(lead, baxes, *rest))
+    return jax.tree.map(leaf, batch_shapes)

@@ -1,0 +1,1 @@
+from repro.models import cnn, encdec, lm  # noqa: F401

@@ -1,0 +1,186 @@
+"""Whisper-style encoder-decoder backbone (audio frontend stubbed).
+
+The mel-spectrogram + conv feature extractor is the allowed stub:
+`encoder_frames` arrive as precomputed (B, T_enc, d_model) embeddings.
+Encoder: bidirectional attention + GELU MLP. Decoder: causal self-attention
+(KV-cached) + cross-attention over the encoder output (cross-KV computed once
+at prefill) + GELU MLP. LayerNorm, learned-style sinusoidal positions.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks as _blocks
+from repro.nn import attention, layers
+
+
+def _sinusoid(seq: int, d: int, dtype):
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    i = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (2 * i / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+def _init_enc_layer(key, cfg, dt):
+    ks = layers.split(key, 2)
+    return {
+        "norm1": layers.init_layernorm(cfg.d_model, dt),
+        "attn": attention.init_gqa(ks[0], cfg.d_model, cfg.num_heads,
+                                   cfg.num_kv_heads, cfg.head_dim, dt),
+        "norm2": layers.init_layernorm(cfg.d_model, dt),
+        "mlp": layers.init_gelu_mlp(ks[1], cfg.d_model, cfg.d_ff, dt),
+    }
+
+
+def _init_dec_layer(key, cfg, dt):
+    ks = layers.split(key, 3)
+    return {
+        "norm1": layers.init_layernorm(cfg.d_model, dt),
+        "self_attn": attention.init_gqa(ks[0], cfg.d_model, cfg.num_heads,
+                                        cfg.num_kv_heads, cfg.head_dim, dt),
+        "norm2": layers.init_layernorm(cfg.d_model, dt),
+        "cross_attn": attention.init_gqa(ks[1], cfg.d_model, cfg.num_heads,
+                                         cfg.num_kv_heads, cfg.head_dim, dt),
+        "norm3": layers.init_layernorm(cfg.d_model, dt),
+        "mlp": layers.init_gelu_mlp(ks[2], cfg.d_model, cfg.d_ff, dt),
+    }
+
+
+def init_encdec(key, cfg):
+    dt = jnp.dtype(cfg.dtype)
+    ks = layers.split(key, 4 + cfg.num_encoder_layers + cfg.num_layers)
+    enc = [_init_enc_layer(k, cfg, dt) for k in ks[:cfg.num_encoder_layers]]
+    dec = [_init_dec_layer(k, cfg, dt)
+           for k in ks[cfg.num_encoder_layers:
+                       cfg.num_encoder_layers + cfg.num_layers]]
+    stack = lambda ps: jax.tree.map(lambda *xs: jnp.stack(xs), *ps)
+    return {
+        "embed": layers.embed_init(ks[-1], cfg.vocab_size, cfg.d_model, dt),
+        "enc_layers": stack(enc),
+        "dec_layers": stack(dec),
+        "enc_norm": layers.init_layernorm(cfg.d_model, dt),
+        "dec_norm": layers.init_layernorm(cfg.d_model, dt),
+        "lm_head": layers.dense_init(ks[-2], cfg.d_model, cfg.vocab_size, dt),
+    }
+
+
+_ATT_KW = dict(rope_kind="none", rope_theta=10000.0)
+
+
+def encode(params, cfg, frames):
+    """frames (B, T_enc, d_model) stub embeddings -> (B, T_enc, d)."""
+    dt = jnp.dtype(cfg.dtype)
+    B, T, _ = frames.shape
+    x = frames.astype(dt) + _sinusoid(T, cfg.d_model, dt)[None]
+    kw = dict(num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+              head_dim=cfg.head_dim, **_ATT_KW)
+    pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+
+    def body(x, lp):
+        h = layers.layernorm(lp["norm1"], x, cfg.norm_eps)
+        x = x + attention.gqa_block(lp["attn"], h, pos, causal=False, **kw)
+        h = layers.layernorm(lp["norm2"], x, cfg.norm_eps)
+        x = x + layers.gelu_mlp(lp["mlp"], h)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"],
+                        unroll=True if _blocks.UNROLL else 1)
+    return layers.layernorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _cross_kv(lp, cfg, enc_out):
+    """Precompute cross-attention K/V from the encoder output."""
+    B, T, _ = enc_out.shape
+    k = jnp.einsum("bsd,de->bse", enc_out, lp["cross_attn"]["wk"]).reshape(
+        B, T, cfg.num_kv_heads, cfg.head_dim)
+    v = jnp.einsum("bsd,de->bse", enc_out, lp["cross_attn"]["wv"]).reshape(
+        B, T, cfg.num_kv_heads, cfg.head_dim)
+    return k, v
+
+
+def decode_forward(params, cfg, tokens, enc_out, *, mode: str = "train",
+                   self_cache=None, cross_kv=None, positions=None):
+    """Decoder over target tokens.
+
+    train/prefill: tokens (B, S). decode: tokens (B, 1) with self_cache
+    (stacked (L,B,Sc,G,hd) pair) and cross_kv precomputed.
+    Returns dict(features, logits, caches).
+    """
+    dt = jnp.dtype(cfg.dtype)
+    B, S = tokens.shape
+    kw = dict(num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+              head_dim=cfg.head_dim, **_ATT_KW)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if positions is None:
+        offset = 0 if mode != "decode" else _self_len(self_cache) - 1
+        positions = offset + jnp.arange(S, dtype=jnp.int32)[None]
+        positions = jnp.broadcast_to(positions, (B, S))
+    x = x + _sinusoid_at(positions, cfg.d_model, dt)
+
+    if mode == "decode":
+        def body(x, inp):
+            lp, (ck, cv), (xk, xv) = inp
+            h = layers.layernorm(lp["norm1"], x, cfg.norm_eps)
+            y, nk, nv = attention.gqa_decode(lp["self_attn"], h, ck, cv,
+                                             positions, **kw)
+            x = x + y
+            h = layers.layernorm(lp["norm2"], x, cfg.norm_eps)
+            x = x + attention.gqa_block(lp["cross_attn"], h, positions,
+                                        causal=False, kv=(xk, xv), **kw)
+            h = layers.layernorm(lp["norm3"], x, cfg.norm_eps)
+            x = x + layers.gelu_mlp(lp["mlp"], h)
+            return x, (nk, nv)
+
+        x, new_cache = jax.lax.scan(
+            body, x, (params["dec_layers"], self_cache, cross_kv),
+            unroll=True if _blocks.UNROLL else 1)
+        caches = {"self": new_cache, "cross": cross_kv}
+    else:
+        def body(x, lp):
+            h = layers.layernorm(lp["norm1"], x, cfg.norm_eps)
+            if mode == "prefill":
+                y, kv = attention.gqa_block(lp["self_attn"], h, positions,
+                                            causal=True, return_kv=True, **kw)
+            else:
+                y = attention.gqa_block(lp["self_attn"], h, positions,
+                                        causal=True, **kw)
+                kv = (jnp.zeros((), dt),) * 2
+            x = x + y
+            xkv = _cross_kv(lp, cfg, enc_out)
+            h = layers.layernorm(lp["norm2"], x, cfg.norm_eps)
+            x = x + attention.gqa_block(lp["cross_attn"], h, positions,
+                                        causal=False, kv=xkv, **kw)
+            h = layers.layernorm(lp["norm3"], x, cfg.norm_eps)
+            x = x + layers.gelu_mlp(lp["mlp"], h)
+            return x, (kv, xkv) if mode == "prefill" else None
+
+        x, ys = jax.lax.scan(body, x, params["dec_layers"],
+                             unroll=True if _blocks.UNROLL else 1)
+        caches = None
+        if mode == "prefill":
+            caches = {"self": ys[0], "cross": ys[1]}
+
+    features = layers.layernorm(params["dec_norm"], x, cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", features, params["lm_head"])
+    return {"features": features, "logits": logits, "caches": caches,
+            "aux": jnp.zeros((), jnp.float32)}
+
+
+def _sinusoid_at(positions, d, dtype):
+    i = jnp.arange(d // 2, dtype=jnp.float32)[None, None, :]
+    ang = positions.astype(jnp.float32)[..., None] / (10000.0 ** (2 * i / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+def _self_len(self_cache) -> int:
+    return self_cache[0].shape[2]
+
+
+def init_self_cache(cfg, batch_size: int, ctx_len: int):
+    dt = jnp.dtype(cfg.dtype)
+    L = cfg.num_layers
+    z = lambda hd: jnp.zeros((L, batch_size, ctx_len, cfg.num_kv_heads, hd), dt)
+    return (z(cfg.head_dim), z(cfg.v_head_dim))

@@ -1,0 +1,191 @@
+"""GQA attention: chunked online-softmax (memory-bounded) + decode step.
+
+The chunked path is the portable JAX implementation used for training,
+prefill and the multi-pod dry-run (memory O(S·Ck) instead of O(S²)); the
+Pallas flash-attention kernel in kernels/flash_attention.py implements the
+same math with explicit VMEM tiling for TPU and is validated against
+kernels/ref.py in interpret mode.
+
+Layouts: x (B, S, D); q (B, S, H, hd); k/v (B, S, G, hd) with G = kv heads.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import layers, rope as rope_lib
+
+NEG_INF = -1e30
+
+
+def init_gqa(key, d_model: int, num_heads: int, num_kv_heads: int,
+             head_dim: int, dtype):
+    k1, k2, k3, k4 = layers.split(key, 4)
+    return {
+        "wq": layers.dense_init(k1, d_model, num_heads * head_dim, dtype),
+        "wk": layers.dense_init(k2, d_model, num_kv_heads * head_dim, dtype),
+        "wv": layers.dense_init(k3, d_model, num_kv_heads * head_dim, dtype),
+        "wo": layers.dense_init(k4, num_heads * head_dim, d_model, dtype),
+    }
+
+
+def qkv(params, x, num_heads: int, num_kv_heads: int, head_dim: int):
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,de->bse", x, params["wq"]).reshape(B, S, num_heads, head_dim)
+    k = jnp.einsum("bsd,de->bse", x, params["wk"]).reshape(B, S, num_kv_heads, head_dim)
+    v = jnp.einsum("bsd,de->bse", x, params["wv"]).reshape(B, S, num_kv_heads, head_dim)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# chunked online-softmax attention (full / causal / sliding window)
+# ---------------------------------------------------------------------------
+def chunked_attention(q, k, v, *, causal: bool, window: int = 0,
+                      chunk: int = 512, q_offset: int = 0):
+    """q (B,Sq,H,hd); k,v (B,Sk,G,hd). Returns (B,Sq,H,hd).
+
+    Scans over KV chunks with a running (max, sum, acc) — memory bounded by
+    one (B,G,Hr,Sq,Ck) score block. `q_offset` is the absolute position of
+    q[0] (for prefill continuation); kv positions start at 0.
+    """
+    B, Sq, H, hd = q.shape
+    _, Sk, G, _ = k.shape
+    hv = v.shape[-1]
+    Hr = H // G
+    chunk = min(chunk, Sk)
+    assert Sk % chunk == 0, (Sk, chunk)
+    n_chunks = Sk // chunk
+
+    qf = (q.reshape(B, Sq, G, Hr, hd) * (hd ** -0.5)).astype(jnp.float32)
+    kf = k.transpose(1, 0, 2, 3).reshape(n_chunks, chunk, B, G, hd)
+    vf = v.transpose(1, 0, 2, 3).reshape(n_chunks, chunk, B, G, hv)
+
+    q_pos = q_offset + jnp.arange(Sq, dtype=jnp.int32)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        j, kj, vj = inp
+        kj = kj.transpose(1, 2, 0, 3)                 # (B,G,Ck,hd)
+        vj = vj.transpose(1, 2, 0, 3)
+        s = jnp.einsum("bqghd,bgkd->bgqhk", qf, kj.astype(jnp.float32))
+        k_pos = j * chunk + jnp.arange(chunk, dtype=jnp.int32)
+        mask = jnp.ones((Sq, chunk), dtype=bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window:
+            mask &= (q_pos[:, None] - k_pos[None, :]) < window
+        s = jnp.where(mask[None, None, :, None, :], s, NEG_INF)  # (B,G,Sq,Hr,Ck)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        scale = jnp.exp(m - m_new)
+        l_new = l * scale + jnp.sum(p, axis=-1)
+        acc_new = acc * scale[..., None] + jnp.einsum(
+            "bgqhk,bgkd->bgqhd", p, vj.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, G, Sq, Hr), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, G, Sq, Hr), jnp.float32)
+    a0 = jnp.zeros((B, G, Sq, Hr, hv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (jnp.arange(n_chunks, dtype=jnp.int32), kf, vf))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3, 4).reshape(B, Sq, H, hv).astype(q.dtype)
+
+
+def full_attention(q, k, v, *, causal: bool, window: int = 0, q_offset: int = 0):
+    """Naive reference (materializes scores); used for short KV / oracles."""
+    B, Sq, H, hd = q.shape
+    _, Sk, G, _ = k.shape
+    hv = v.shape[-1]
+    Hr = H // G
+    qf = (q.reshape(B, Sq, G, Hr, hd) * (hd ** -0.5)).astype(jnp.float32)
+    s = jnp.einsum("bqghd,bkgd->bgqhk", qf, k.astype(jnp.float32))
+    q_pos = q_offset + jnp.arange(Sq, dtype=jnp.int32)
+    k_pos = jnp.arange(Sk, dtype=jnp.int32)
+    mask = jnp.ones((Sq, Sk), dtype=bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window:
+        mask &= (q_pos[:, None] - k_pos[None, :]) < window
+    s = jnp.where(mask[None, None, :, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgqhk,bkgd->bgqhd", p, v.astype(jnp.float32))
+    return out.transpose(0, 2, 1, 3, 4).reshape(B, Sq, H, hv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# module-level forward paths
+# ---------------------------------------------------------------------------
+def gqa_block(params, x, positions, *, num_heads, num_kv_heads, head_dim,
+              rope_kind, rope_theta, causal=True, window=0, chunk=512,
+              return_kv=False, kv=None):
+    """Self/cross attention on a full sequence. kv: optional (k, v) override
+    (cross-attention). Returns y (B,S,D) [, (k, v)]."""
+    q, k_new, v_new = qkv(params, x, num_heads, num_kv_heads, head_dim)
+    if kv is None:
+        if rope_kind != "none":
+            q = rope_lib.apply_rope(q, positions, theta=rope_theta, kind=rope_kind)
+            k_new = rope_lib.apply_rope(k_new, positions, theta=rope_theta, kind=rope_kind)
+        k, v = k_new, v_new
+    else:
+        k, v = kv
+    Sk = k.shape[1]
+    if Sk <= 2 * chunk or Sk % chunk != 0:
+        o = full_attention(q, k, v, causal=causal, window=window)
+    else:
+        o = chunked_attention(q, k, v, causal=causal, window=window, chunk=chunk)
+    B, S = x.shape[:2]
+    y = jnp.einsum("bse,ed->bsd", o.reshape(B, S, num_heads * head_dim),
+                   params["wo"])
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def gqa_decode(params, x, cache_k, cache_v, positions, *, num_heads,
+               num_kv_heads, head_dim, rope_kind, rope_theta,
+               cache_index=None, window: int = 0, masked: bool = False):
+    """One-token decode. x (B,1,D); cache_k/v (B,Sc,G,hd) pre-filled.
+
+    `cache_index` is the slot the new token's K/V overwrite (defaults to the
+    last slot — the steady-state dry-run semantics where every slot is
+    valid). With `masked=True`, attention is restricted to slots
+    <= cache_index (incremental generation into a fixed-size cache; the
+    serving path). With `window`, the cache is a ring buffer of size
+    `window`. Keys are stored already rotated. Returns (y, new_k, new_v).
+    """
+    B = x.shape[0]
+    q, k1, v1 = qkv(params, x, num_heads, num_kv_heads, head_dim)
+    if rope_kind != "none":
+        q = rope_lib.apply_rope(q, positions, theta=rope_theta, kind=rope_kind)
+        k1 = rope_lib.apply_rope(k1, positions, theta=rope_theta, kind=rope_kind)
+    if cache_index is None:
+        cache_index = cache_k.shape[1] - 1
+    k = jax.lax.dynamic_update_slice(cache_k, k1.astype(cache_k.dtype),
+                                     (0, cache_index, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache_v, v1.astype(cache_v.dtype),
+                                     (0, cache_index, 0, 0))
+    if masked:
+        Sc = k.shape[1]
+        G = num_kv_heads
+        Hr = num_heads // G
+        qf = (q.reshape(B, 1, G, Hr, head_dim)
+              * (head_dim ** -0.5)).astype(jnp.float32)
+        s = jnp.einsum("bqghd,bkgd->bgqhk", qf, k.astype(jnp.float32))
+        valid = jnp.arange(Sc) <= cache_index
+        s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bgqhk,bkgd->bgqhd", p, v.astype(jnp.float32))
+        o = o.transpose(0, 2, 1, 3, 4).reshape(B, 1, num_heads, head_dim)
+        o = o.astype(q.dtype)
+    else:
+        # steady-state decode: every cache slot valid (dry-run semantics);
+        # ring-buffer order does not matter for softmax(qk)v.
+        o = full_attention(q, k, v, causal=False)
+    y = jnp.einsum("bse,ed->bsd", o.reshape(B, 1, num_heads * head_dim),
+                   params["wo"])
+    return y, k, v

@@ -1,0 +1,129 @@
+"""Multi-head Latent Attention (DeepSeek-V2 / MiniCPM3).
+
+Two execution forms:
+  - expanded (train / prefill): latent kv is up-projected to per-head
+    (k_nope, v); attention runs through the shared chunked online-softmax.
+  - absorbed (decode): W_uk is absorbed into the query and W_uv into the
+    output so attention runs directly against the compressed latent cache
+    (B, S, kv_lora + qk_rope) — the MLA inference trick, which is what makes
+    the 32k/500k decode caches small.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import attention, layers, rope as rope_lib
+
+
+def init_mla(key, cfg, dtype):
+    d = cfg.d_model
+    H = cfg.num_heads
+    r_q, r_kv = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = layers.split(key, 8)
+    p = {}
+    if r_q:
+        p["wq_a"] = layers.dense_init(ks[0], d, r_q, dtype)
+        p["q_norm"] = layers.init_rmsnorm(r_q, dtype)
+        p["wq_b"] = layers.dense_init(ks[1], r_q, H * (dn + dr), dtype)
+    else:
+        p["wq_b"] = layers.dense_init(ks[1], d, H * (dn + dr), dtype)
+    p["wkv_a"] = layers.dense_init(ks[2], d, r_kv + dr, dtype)
+    p["kv_norm"] = layers.init_rmsnorm(r_kv, dtype)
+    p["wkv_b"] = layers.dense_init(ks[3], r_kv, H * (dn + dv), dtype)
+    p["wo"] = layers.dense_init(ks[4], H * dv, d, dtype)
+    return p
+
+
+def _queries(p, cfg, x):
+    B, S, _ = x.shape
+    H, dn, dr = cfg.num_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    if cfg.q_lora_rank:
+        cq = jnp.einsum("bsd,dr->bsr", x, p["wq_a"])
+        cq = layers.rmsnorm(p["q_norm"], cq, cfg.norm_eps)
+        q = jnp.einsum("bsr,re->bse", cq, p["wq_b"])
+    else:
+        q = jnp.einsum("bsd,de->bse", x, p["wq_b"])
+    q = q.reshape(B, S, H, dn + dr)
+    return q[..., :dn], q[..., dn:]          # q_nope (B,S,H,dn), q_rope (B,S,H,dr)
+
+
+def _latent_kv(p, cfg, x, positions):
+    """-> c_kv (B,S,r_kv) normalized, k_rope (B,S,1,dr) rotated."""
+    r_kv, dr = cfg.kv_lora_rank, cfg.qk_rope_dim
+    kv = jnp.einsum("bsd,de->bse", x, p["wkv_a"])
+    c_kv, k_rope = kv[..., :r_kv], kv[..., r_kv:]
+    c_kv = layers.rmsnorm(p["kv_norm"], c_kv, cfg.norm_eps)
+    k_rope = rope_lib.apply_rope(k_rope[:, :, None, :], positions,
+                                 theta=cfg.rope_theta, kind="rope")
+    return c_kv, k_rope
+
+
+def mla_block(p, cfg, x, positions, *, window: int = 0, chunk: int = 512,
+              return_cache: bool = False):
+    """Expanded-form MLA over a full sequence (train / prefill)."""
+    B, S, _ = x.shape
+    H, dn, dr, dv = (cfg.num_heads, cfg.qk_nope_dim, cfg.qk_rope_dim,
+                     cfg.v_head_dim)
+    q_nope, q_rope = _queries(p, cfg, x)
+    q_rope = rope_lib.apply_rope(q_rope, positions, theta=cfg.rope_theta,
+                                 kind="rope")
+    c_kv, k_rope = _latent_kv(p, cfg, x, positions)
+    kv = jnp.einsum("bsr,re->bse", c_kv, p["wkv_b"]).reshape(B, S, H, dn + dv)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, S, H, dr))],
+                        axis=-1)
+    if S <= 2 * chunk:
+        o = attention.full_attention(q, k, v, causal=True, window=window)
+    else:
+        o = attention.chunked_attention(q, k, v, causal=True, window=window,
+                                        chunk=chunk)
+    y = jnp.einsum("bse,ed->bsd", o.reshape(B, S, H * dv), p["wo"])
+    if return_cache:
+        cache = jnp.concatenate([c_kv, k_rope[:, :, 0, :]], axis=-1)
+        return y, cache                       # (B,S,r_kv+dr)
+    return y
+
+
+def mla_decode(p, cfg, x, cache, positions, *, cache_index=None,
+               masked: bool = False):
+    """Absorbed-form one-token decode against the latent cache.
+
+    cache: (B, Sc, r_kv + dr). With `masked=True` attention is restricted to
+    slots <= cache_index (incremental serving). Returns (y, new_cache).
+    """
+    B = x.shape[0]
+    H, dn, dr, dv = (cfg.num_heads, cfg.qk_nope_dim, cfg.qk_rope_dim,
+                     cfg.v_head_dim)
+    r_kv = cfg.kv_lora_rank
+    q_nope, q_rope = _queries(p, cfg, x)                     # (B,1,H,·)
+    q_rope = rope_lib.apply_rope(q_rope, positions, theta=cfg.rope_theta,
+                                 kind="rope")
+    c_new, kr_new = _latent_kv(p, cfg, x, positions)
+    new_entry = jnp.concatenate([c_new, kr_new[:, :, 0, :]], axis=-1)
+    if cache_index is None:
+        cache_index = cache.shape[1] - 1
+    cache = jax.lax.dynamic_update_slice(
+        cache, new_entry.astype(cache.dtype), (0, cache_index, 0))
+    c_kv, k_rope = cache[..., :r_kv], cache[..., r_kv:]      # (B,Sc,·)
+
+    w_b = p["wkv_b"].reshape(r_kv, H, dn + dv)
+    w_uk, w_uv = w_b[..., :dn], w_b[..., dn:]                # (r,H,dn),(r,H,dv)
+    # absorb: q_lat[h] = q_nope[h] @ W_uk[:,h,:]^T  -> latent-space query
+    q_lat = jnp.einsum("bshd,rhd->bshr", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))             # (B,1,H,r)
+    scale = (dn + dr) ** -0.5
+    s = (jnp.einsum("bshr,bkr->bhsk", q_lat, c_kv.astype(jnp.float32))
+         + jnp.einsum("bshd,bkd->bhsk", q_rope.astype(jnp.float32),
+                      k_rope.astype(jnp.float32))) * scale   # (B,H,1,Sc)
+    if masked:
+        valid = jnp.arange(cache.shape[1]) <= cache_index
+        s = jnp.where(valid[None, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhsk,bkr->bshr", w, c_kv.astype(jnp.float32))
+    o = jnp.einsum("bshr,rhd->bshd", o_lat, w_uv.astype(jnp.float32))
+    y = jnp.einsum("bse,ed->bsd", o.reshape(B, 1, H * dv).astype(x.dtype),
+                   p["wo"])
+    return y, cache

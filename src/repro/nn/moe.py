@@ -1,0 +1,116 @@
+"""Mixture-of-Experts layer: top-k router + capacity-based dispatch.
+
+TPU adaptation: GPU MoE kernels scatter tokens with atomics; on TPU we use
+the dropless-ish capacity dispatch — per batch-row position-in-expert via a
+one-hot cumsum, a scatter into an (E, capacity, d) buffer, one batched einsum
+over stacked expert weights (MXU-friendly), and a gather back. Active FLOPs
+are E·cap·d·f ≈ cf·k·T·d·f (true top-k compute, not dense all-expert compute,
+so the roofline MODEL_FLOPS/HLO_FLOPs ratio stays honest).
+
+Stacked expert weight names end in `_e` — sharding.param_spec shards their
+d_ff dim over the model axis (expert-parallel E-sharding is a §Perf variant).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.nn import layers
+
+
+def init_moe(key, d_model: int, num_experts: int, moe_d_ff: int,
+             num_shared: int, dtype):
+    ks = layers.split(key, 5)
+    E, f = num_experts, moe_d_ff
+    scale = 1.0 / math.sqrt(d_model)
+    p = {
+        "router": layers.dense_init(ks[0], d_model, E, jnp.float32, scale=scale),
+        "w_gate_e": (jax.random.normal(ks[1], (E, d_model, f)) * scale).astype(dtype),
+        "w_up_e": (jax.random.normal(ks[2], (E, d_model, f)) * scale).astype(dtype),
+        "w_down_e": (jax.random.normal(ks[3], (E, f, d_model)) / math.sqrt(f)).astype(dtype),
+    }
+    if num_shared:
+        p["shared"] = layers.init_swiglu(ks[4], d_model, moe_d_ff * num_shared,
+                                         dtype)
+    return p
+
+
+def capacity(seq: int, k: int, num_experts: int, cf: float) -> int:
+    return max(1, int(math.ceil(cf * seq * k / num_experts)))
+
+
+def route(router_w, x, k: int):
+    """x (B,S,d) -> probs (B,S,k), idx (B,S,k) int32, aux_loss scalar."""
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                  # (B,S,E)
+    top_p, top_i = jax.lax.top_k(probs, k)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, axis=-1, keepdims=True), 1e-9)
+    # Switch-style load-balance aux loss
+    E = router_w.shape[-1]
+    me = jnp.mean(probs, axis=(0, 1))                        # mean prob/expert
+    one_hot = jax.nn.one_hot(top_i, E, dtype=jnp.float32)    # (B,S,k,E)
+    ce = jnp.mean(jnp.sum(one_hot, axis=2), axis=(0, 1)) / k # frac tokens/expert
+    aux = E * jnp.sum(me * ce)
+    return top_p, top_i, aux
+
+
+def _dispatch_row(x_row, idx_row, cap: int, E: int):
+    """x_row (S,d); idx_row (S,k) -> buffer (E*cap, d), scatter idx (S,k)."""
+    S, k = idx_row.shape
+    flat = idx_row.reshape(-1)                               # (S*k,)
+    onehot = jax.nn.one_hot(flat, E, dtype=jnp.int32)        # (S*k, E)
+    pos = jnp.cumsum(onehot, axis=0) - 1                     # position in expert
+    pos = jnp.sum(pos * onehot, axis=-1)                     # (S*k,)
+    valid = pos < cap
+    slot = jnp.where(valid, flat * cap + pos, E * cap)       # overflow -> dump
+    buf = jnp.zeros((E * cap + 1, x_row.shape[-1]), x_row.dtype)
+    vals = jnp.repeat(x_row, k, axis=0)                      # (S*k, d)
+    buf = buf.at[slot].add(vals)
+    return buf[:-1], slot.reshape(S, k), valid.reshape(S, k)
+
+
+def moe_block(p, x, *, num_experts: int, k: int, cf: float,
+              num_shared: int) -> Tuple[jax.Array, jax.Array]:
+    """x (B,S,d) -> (y (B,S,d), aux_loss)."""
+    B, S, d = x.shape
+    E = num_experts
+    cap = capacity(S, k, E, cf)
+    top_p, top_i, aux = route(p["router"], x, k)
+
+    buf, slot, valid = jax.vmap(
+        lambda xr, ir: _dispatch_row(xr, ir, cap, E))(x, top_i)
+    buf = buf.reshape(B, E, cap, d)
+    if sharding.hint("moe_ep"):
+        # expert-parallel §Perf variant: dispatch buffer and expert compute
+        # sharded over experts on the model axis (all-to-all style routing)
+        buf = sharding.constrain(buf, "data", "model", None, None)
+    elif sharding.hint("moe_dp"):
+        # dp_only/zero1: keep the dispatch fully batch-local — without this
+        # GSPMD replicates the capacity einsum when expert weights are
+        # replicated and only the row dim is sharded (measured 87×)
+        buf = sharding.constrain(buf, ("data", "model"), None, None, None)
+    g = jnp.einsum("becd,edf->becf", buf, p["w_gate_e"])
+    u = jnp.einsum("becd,edf->becf", buf, p["w_up_e"])
+    h = jax.nn.silu(g) * u
+    out = jnp.einsum("becf,efd->becd", h, p["w_down_e"])
+    if sharding.hint("moe_ep"):
+        out = sharding.constrain(out, "data", "model", None, None)
+    elif sharding.hint("moe_dp"):
+        out = sharding.constrain(out, ("data", "model"), None, None, None)
+    out = out.reshape(B, E * cap, d)
+
+    def _gather_row(o_row, slot_row):
+        safe = jnp.minimum(slot_row.reshape(-1), E * cap - 1)
+        return o_row[safe].reshape(S, -1, d)                 # (S,k,d)
+    y_k = jax.vmap(_gather_row)(out, slot)                   # (B,S,k,d)
+    w = (top_p * valid.astype(top_p.dtype))[..., None].astype(y_k.dtype)
+    y = jnp.sum(y_k * w, axis=2)
+
+    if num_shared:
+        y = y + layers.swiglu(p["shared"], x)
+    return y, aux.astype(jnp.float32)

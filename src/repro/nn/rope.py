@@ -1,0 +1,76 @@
+"""Rotary position embeddings: standard, 2D-partial (ChatGLM), M-RoPE (Qwen2-VL).
+
+Inputs use the half-split convention: x[..., :r/2] and x[..., r/2:] form the
+rotation pairs (llama convention). `positions` is (B, S) int32 for rope/rope2d
+and (B, S, 3) [t, h, w] for mrope (text tokens use t == h == w, in which case
+M-RoPE coincides with standard RoPE — the property test checks this).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+# M-RoPE frequency-band split across (t, h, w), in units of freq indices of
+# the half-dim. Scaled to the actual rot_dim at call time (Qwen2-VL uses
+# [16, 24, 24] for rot half-dim 64 -> fractions (0.25, 0.375, 0.375)).
+MROPE_FRACTIONS = (0.25, 0.375, 0.375)
+
+
+def _freqs(rot_half: int, theta: float):
+    i = jnp.arange(rot_half, dtype=jnp.float32)
+    return theta ** (-2.0 * i / (2.0 * rot_half))
+
+
+def _cos_sin(positions, theta: float, rot_half: int, kind: str):
+    """-> cos, sin of shape (B, S, rot_half) float32."""
+    inv = _freqs(rot_half, theta)                              # (rot_half,)
+    if kind == "mrope":
+        assert positions.ndim == 3 and positions.shape[-1] == 3
+        n_t = int(round(MROPE_FRACTIONS[0] * rot_half))
+        n_h = int(round(MROPE_FRACTIONS[1] * rot_half))
+        n_w = rot_half - n_t - n_h
+        sect = jnp.concatenate([
+            jnp.zeros((n_t,), jnp.int32),
+            jnp.ones((n_h,), jnp.int32),
+            jnp.full((n_w,), 2, jnp.int32)])
+        pos = jnp.take_along_axis(
+            positions.astype(jnp.float32),
+            jnp.broadcast_to(sect[None, None, :], positions.shape[:2] + (rot_half,)),
+            axis=-1)                                           # (B,S,rot_half)
+        ang = pos * inv[None, None, :]
+    else:
+        pos = positions.astype(jnp.float32)                    # (B,S)
+        ang = pos[..., None] * inv[None, None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def rot_dim_for(kind: str, head_dim: int) -> int:
+    if kind == "rope2d":
+        return head_dim // 2            # ChatGLM: rotary on half the dims
+    return head_dim
+
+
+def apply_rope(x, positions, *, theta: float, kind: str):
+    """x: (B, S, H, D). Returns same shape/dtype with rotary applied."""
+    if kind == "none":
+        return x
+    d = x.shape[-1]
+    r = rot_dim_for(kind, d)
+    half = r // 2
+    cos, sin = _cos_sin(positions, theta, half, kind)          # (B,S,half)
+    cos = cos[:, :, None, :]
+    sin = sin[:, :, None, :]
+    xr, xp = x[..., :r].astype(jnp.float32), x[..., r:]
+    x1, x2 = xr[..., :half], xr[..., half:]
+    rot = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return jnp.concatenate([rot.astype(x.dtype), xp], axis=-1) if r < d \
+        else rot.astype(x.dtype)
+
+
+def default_positions(batch: int, seq: int, kind: str, offset=0):
+    pos = offset + jnp.arange(seq, dtype=jnp.int32)[None, :]
+    pos = jnp.broadcast_to(pos, (batch, seq))
+    if kind == "mrope":
+        return jnp.broadcast_to(pos[..., None], (batch, seq, 3))
+    return pos

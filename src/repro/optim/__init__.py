@@ -1,0 +1,2 @@
+from repro.optim.optim import (adam_init, adam_update, clip_by_global_norm,
+                               cosine_schedule, sgd_init, sgd_update)  # noqa: F401

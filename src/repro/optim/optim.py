@@ -1,0 +1,91 @@
+"""Optimizers from scratch (no optax offline): Adam (paper's choice,
+lr 1e-3), SGD(+momentum), cosine schedule, global-norm clipping.
+
+Optimizer state mirrors the param pytree, so the same sharding specs apply
+(FSDP shards Adam moments exactly like the params they track).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def adam_init(params) -> AdamState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamState(jnp.zeros((), jnp.int32), zeros,
+                     jax.tree.map(jnp.copy, zeros))
+
+
+def adam_update(params, grads, state: AdamState, *, lr=1e-3, b1=0.9,
+                b2=0.999, eps=1e-8, weight_decay=0.0):
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g.astype(jnp.float32),
+                     state.m, grads)
+    v = jax.tree.map(lambda vv, g: b2 * vv
+                     + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                     state.v, grads)
+    bc1 = 1 - b1 ** t
+    bc2 = 1 - b2 ** t
+
+    def upd(p, mm, vv):
+        u = (mm / bc1) / (jnp.sqrt(vv / bc2) + eps)
+        if weight_decay:
+            u = u + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, AdamState(step, m, v)
+
+
+class SgdState(NamedTuple):
+    momentum: Any
+
+
+def sgd_init(params, momentum: float = 0.0) -> SgdState:
+    if momentum == 0.0:
+        return SgdState(None)
+    return SgdState(jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params))
+
+
+def sgd_update(params, grads, state: SgdState, *, lr=1e-2, momentum=0.0):
+    if momentum and state.momentum is not None:
+        buf = jax.tree.map(lambda b, g: momentum * b + g.astype(jnp.float32),
+                           state.momentum, grads)
+        new = jax.tree.map(lambda p, b: (p.astype(jnp.float32)
+                                         - lr * b).astype(p.dtype),
+                           params, buf)
+        return new, SgdState(buf)
+    new = jax.tree.map(lambda p, g: (p.astype(jnp.float32)
+                                     - lr * g.astype(jnp.float32)).astype(p.dtype),
+                       params, grads)
+    return new, state
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn
+
+
+def cosine_schedule(step, *, base_lr: float, warmup: int, total: int,
+                    min_frac: float = 0.1):
+    t = step.astype(jnp.float32)
+    warm = base_lr * t / jnp.maximum(1.0, float(warmup))
+    prog = jnp.clip((t - warmup) / jnp.maximum(1.0, float(total - warmup)),
+                    0.0, 1.0)
+    cos = base_lr * (min_frac + (1 - min_frac) * 0.5
+                     * (1 + jnp.cos(math.pi * prog)))
+    return jnp.where(t < warmup, warm, cos)

@@ -1,0 +1,83 @@
+"""Attention: chunked online-softmax vs naive; windowing; GQA; decode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.nn import attention
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _qkv(B, Sq, Sk, H, G, hd, dtype=jnp.float32):
+    ks = jax.random.split(KEY, 3)
+    return (jax.random.normal(ks[0], (B, Sq, H, hd), dtype),
+            jax.random.normal(ks[1], (B, Sk, G, hd), dtype),
+            jax.random.normal(ks[2], (B, Sk, G, hd), dtype))
+
+
+@pytest.mark.parametrize("H,G", [(4, 4), (4, 2), (8, 1)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_chunked_matches_full(H, G, causal):
+    q, k, v = _qkv(2, 64, 64, H, G, 16)
+    got = attention.chunked_attention(q, k, v, causal=causal, chunk=16)
+    want = attention.full_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+def test_chunked_window_matches_full_window():
+    q, k, v = _qkv(1, 128, 128, 4, 2, 8)
+    got = attention.chunked_attention(q, k, v, causal=True, window=32,
+                                      chunk=16)
+    want = attention.full_attention(q, k, v, causal=True, window=32)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+def test_window_masks_distant_tokens():
+    # with window=1 every token attends only to itself -> output == v row
+    q, k, v = _qkv(1, 16, 16, 2, 2, 8)
+    out = attention.full_attention(q, k, v, causal=True, window=1)
+    np.testing.assert_allclose(out[0, :, 0], v[0, :, 0], atol=1e-5)
+
+
+def test_gqa_equals_repeated_kv():
+    q, k, v = _qkv(2, 32, 32, 8, 2, 16)
+    krep = jnp.repeat(k, 4, axis=2)
+    vrep = jnp.repeat(v, 4, axis=2)
+    got = attention.full_attention(q, k, v, causal=True)
+    want = attention.full_attention(q, krep, vrep, causal=True)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+def test_v_head_dim_differs():
+    q, k, _ = _qkv(1, 16, 16, 4, 4, 8)
+    v = jax.random.normal(KEY, (1, 16, 4, 12))
+    out_f = attention.full_attention(q, k, v, causal=True)
+    out_c = attention.chunked_attention(q, k, v, causal=True, chunk=8)
+    assert out_f.shape == (1, 16, 4, 12)
+    np.testing.assert_allclose(out_f, out_c, atol=2e-5, rtol=2e-5)
+
+
+def test_mixed_dtype_bf16():
+    q, k, v = _qkv(1, 32, 32, 4, 2, 16, jnp.bfloat16)
+    got = attention.chunked_attention(q, k, v, causal=True, chunk=8)
+    want = attention.full_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(got.astype(jnp.float32),
+                               want.astype(jnp.float32), atol=2e-2)
+
+
+def test_gqa_decode_matches_forward_last_position():
+    """Overwrite-last decode == forward with the last token replaced."""
+    from repro.nn import layers
+    d, H, G, hd, S = 32, 4, 2, 8, 12
+    params = attention.init_gqa(KEY, d, H, G, hd, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, S, d))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (2, S)).astype(jnp.int32)
+    kw = dict(num_heads=H, num_kv_heads=G, head_dim=hd, rope_kind="rope",
+              rope_theta=1e4)
+    y_full, (ck, cv) = attention.gqa_block(params, x, pos, causal=True,
+                                           return_kv=True, **kw)
+    y_dec, _, _ = attention.gqa_decode(params, x[:, -1:], ck, cv,
+                                       pos[:, -1:], **kw)
+    np.testing.assert_allclose(y_dec[:, 0], y_full[:, -1], atol=1e-4,
+                               rtol=1e-4)

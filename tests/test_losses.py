@@ -1,0 +1,107 @@
+"""Unit tests for the paper's objective (Eq. 5-7, Theorem 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import losses
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_ce_matches_manual():
+    logits = jnp.array([[2.0, 0.0, -1.0], [0.5, 0.5, 0.5]])
+    labels = jnp.array([0, 2])
+    want = -np.mean([np.log(np.exp(2) / (np.exp(2) + 1 + np.exp(-1))),
+                     np.log(1 / 3)])
+    np.testing.assert_allclose(losses.ce_loss(logits, labels), want,
+                               rtol=1e-6)
+
+
+def test_ce_mask():
+    logits = jax.random.normal(KEY, (4, 5))
+    labels = jnp.array([0, 1, 2, 3])
+    m = jnp.array([1, 1, 0, 0])
+    got = losses.ce_loss(logits, labels, mask=m)
+    want = losses.ce_loss(logits[:2], labels[:2])
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_kd_zero_at_prototype():
+    protos = jax.random.normal(KEY, (5, 8))
+    labels = jnp.array([0, 3, 4])
+    feats = protos[labels]
+    assert float(losses.kd_loss(feats, protos, labels)) < 1e-10
+
+
+def test_kd_is_mean_per_dim():
+    protos = jnp.zeros((2, 16))
+    feats = jnp.ones((1, 16)) * 2.0
+    got = float(losses.kd_loss(feats, protos, jnp.array([0])))
+    np.testing.assert_allclose(got, 4.0, rtol=1e-6)  # mean(2^2), not sum
+
+
+def test_kd_valid_mask_excludes_empty_classes():
+    protos = jnp.stack([jnp.zeros(4), jnp.full(4, 100.0)])
+    feats = jnp.ones((2, 4))
+    labels = jnp.array([0, 1])
+    valid = jnp.array([True, False])
+    got = float(losses.kd_loss(feats, protos, labels, valid=valid))
+    np.testing.assert_allclose(got, 1.0, rtol=1e-6)  # only class 0 counted
+
+
+def test_hhat_is_probability():
+    s = jax.random.normal(KEY, (7, 10)) * 3
+    t = jax.random.normal(jax.random.PRNGKey(1), (10, 10)) * 3
+    h = losses.hhat_matrix(s, t)
+    assert float(h.min()) >= 0.0 and float(h.max()) <= 1.0
+
+
+def test_disc_perfect_discriminator_low_loss():
+    # one-hot-ish student and teacher distributions aligned by class
+    C = 6
+    big = 50.0
+    s_feats = jnp.eye(C) * big                       # d' == C for simplicity
+    obs = jnp.eye(C) * big
+    labels = jnp.arange(C)
+    w = jnp.eye(C)                                   # τ = identity
+    loss = float(losses.disc_loss(s_feats, obs, labels, w))
+    assert loss < 1e-3, loss
+
+
+def test_disc_chance_level_value():
+    # uniform distributions: ĥ = 1/C for every pair
+    C = 10
+    s = jnp.zeros((4, C))
+    obs = jnp.zeros((C, 8))
+    w = jnp.zeros((8, C))
+    labels = jnp.array([0, 1, 2, 3])
+    got = float(losses.disc_loss(jnp.zeros((4, 8)), obs, labels, w))
+    want = -np.log(1 / C) - (C - 1) * np.log(1 - 1 / C)
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_mi_bound_theorem1():
+    # bound must satisfy I >= log K - L_disc and be <= log K
+    l = jnp.asarray(1.3)
+    b = losses.mi_lower_bound(l, K=9)
+    np.testing.assert_allclose(float(b), np.log(9) - 1.3, rtol=1e-6)
+
+
+def test_disc_sampled_excludes_self_negative():
+    key = jax.random.PRNGKey(3)
+    C, d, B = 50, 8, 4
+    protos = jax.random.normal(KEY, (C, d))
+    feats = jax.random.normal(jax.random.PRNGKey(2), (B, d))
+    labels = jnp.array([0, 1, 2, 3])
+    w = jax.random.normal(jax.random.PRNGKey(4), (d, C))
+    l = losses.disc_loss_sampled(key, feats, protos, labels, w,
+                                 num_negatives=16)
+    assert np.isfinite(float(l)) and float(l) > 0
+
+
+def test_fd_loss_zero_when_matching():
+    mean_logits = jax.random.normal(KEY, (5, 5))
+    labels = jnp.array([1, 4])
+    logits = mean_logits[labels]
+    assert float(losses.fd_loss(logits, mean_logits, labels)) < 1e-12

@@ -1,0 +1,44 @@
+"""MLA: expanded (train/prefill) vs absorbed (decode) consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.nn import mla
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ["deepseek-v2-lite-16b", "minicpm3-4b"])
+def test_decode_matches_expanded_last_position(arch):
+    cfg = get_arch(arch).reduced(num_layers=1, d_model=128)
+    p = mla.init_mla(KEY, cfg, jnp.float32)
+    B, S = 2, 10
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S)).astype(jnp.int32)
+    y_full, cache = mla.mla_block(p, cfg, x, pos, return_cache=True)
+    # absorbed decode with the last token overwriting the last cache slot
+    y_dec, _ = mla.mla_decode(p, cfg, x[:, -1:], cache, pos[:, -1:])
+    np.testing.assert_allclose(y_dec[:, 0], y_full[:, -1], atol=1e-4,
+                               rtol=1e-4)
+
+
+def test_cache_is_compressed():
+    cfg = get_arch("deepseek-v2-lite-16b")
+    # latent cache row = kv_lora + rope dims, NOT heads*(nope+v)
+    per_tok_latent = cfg.kv_lora_rank + cfg.qk_rope_dim
+    per_tok_full = cfg.num_heads * (cfg.qk_nope_dim + cfg.v_head_dim)
+    assert per_tok_latent * 6 < per_tok_full
+
+
+def test_q_lora_path():
+    cfg = get_arch("minicpm3-4b").reduced(num_layers=1, d_model=128)
+    assert cfg.q_lora_rank > 0
+    p = mla.init_mla(KEY, cfg, jnp.float32)
+    assert "wq_a" in p and "q_norm" in p
+    x = jax.random.normal(KEY, (1, 4, cfg.d_model))
+    pos = jnp.arange(4)[None].astype(jnp.int32)
+    y = mla.mla_block(p, cfg, x, pos)
+    assert y.shape == (1, 4, cfg.d_model)
+    assert np.all(np.isfinite(np.asarray(y)))

@@ -1,0 +1,118 @@
+"""Hypothesis property tests for system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import comm, losses, prototypes
+from repro.launch import roofline
+from repro.optim import cosine_schedule
+
+SET = dict(max_examples=25, deadline=None)
+
+
+@given(n1=st.integers(1, 30), n2=st.integers(1, 30), C=st.integers(2, 8),
+       seed=st.integers(0, 2**31 - 1))
+@settings(**SET)
+def test_proto_merge_associative_commutative(n1, n2, C, seed):
+    k = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(k, 3)
+    mk = lambda kk, n: prototypes.accumulate(
+        prototypes.init_state(C, 4),
+        jax.random.normal(kk, (n, 4)),
+        jax.random.randint(kk, (n,), 0, C))
+    a, b = mk(k1, n1), mk(k2, n2)
+    ab = prototypes.merge(a, b)
+    ba = prototypes.merge(b, a)
+    np.testing.assert_allclose(ab.sum, ba.sum, atol=1e-5)
+    c = mk(k3, 5)
+    left = prototypes.merge(prototypes.merge(a, b), c)
+    right = prototypes.merge(a, prototypes.merge(b, c))
+    np.testing.assert_allclose(left.sum, right.sum, atol=1e-5)
+
+
+@given(B=st.integers(1, 8), C=st.integers(2, 12),
+       seed=st.integers(0, 2**31 - 1), scale=st.floats(0.1, 5.0))
+@settings(**SET)
+def test_disc_loss_nonnegative_and_finite(B, C, seed, scale):
+    k = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(k, 3)
+    feats = jax.random.normal(k1, (B, 6)) * scale
+    obs = jax.random.normal(k2, (C, 6)) * scale
+    y = jax.random.randint(k3, (B,), 0, C)
+    w = jax.random.normal(jax.random.PRNGKey(seed ^ 7), (6, C))
+    l = float(losses.disc_loss(feats, obs, y, w))
+    assert np.isfinite(l) and l >= 0.0
+
+
+@given(B=st.integers(1, 6), C=st.integers(2, 10),
+       seed=st.integers(0, 2**31 - 1))
+@settings(**SET)
+def test_mi_bound_never_exceeds_logK(B, C, seed):
+    """Theorem 1 sanity: log K - L_disc <= log K (L_disc >= 0)."""
+    k = jax.random.PRNGKey(seed)
+    feats = jax.random.normal(k, (B, 4))
+    obs = jax.random.normal(jax.random.PRNGKey(seed ^ 3), (C, 4))
+    y = jax.random.randint(k, (B,), 0, C)
+    w = jax.random.normal(jax.random.PRNGKey(seed ^ 5), (4, C))
+    l = losses.disc_loss(feats, obs, y, w)
+    assert float(losses.mi_lower_bound(l, C - 1)) <= np.log(C - 1) + 1e-6
+
+
+@given(C=st.integers(2, 100), d=st.integers(1, 512),
+       m_up=st.integers(1, 4), m_down=st.integers(1, 4),
+       N=st.integers(2, 50))
+@settings(**SET)
+def test_comm_cors_linear_in_C_d(C, d, m_up, m_down, N):
+    up, down = comm.cors_round_floats(C, d, m_up, m_down, N)
+    assert up == N * (m_up + 1) * C * d
+    assert down == N * (m_down + 1) * C * d
+    up2, _ = comm.cors_round_floats(2 * C, d, m_up, m_down, N)
+    assert up2 == 2 * up
+
+
+@given(model_size=st.integers(10**4, 10**10), N=st.integers(2, 20),
+       C=st.integers(2, 1000), d=st.integers(8, 4096))
+@settings(**SET)
+def test_cors_beats_fedavg_when_model_large(model_size, N, C, d):
+    """Paper §Communication: CoRS volume independent of D."""
+    cors_up, _ = comm.cors_round_floats(C, d, 1, 1, N)
+    fl_up, _ = comm.fedavg_round_floats(model_size, N)
+    if model_size > 2 * C * d:
+        assert cors_up < fl_up
+
+
+@given(step=st.integers(0, 10_000))
+@settings(**SET)
+def test_cosine_schedule_bounds(step):
+    lr = float(cosine_schedule(jnp.asarray(step), base_lr=1e-3, warmup=100,
+                               total=10_000))
+    assert 0.0 <= lr <= 1e-3 + 1e-9
+
+
+@given(a=st.floats(0.1, 10), b=st.floats(0.1, 10), c=st.floats(0.1, 10),
+       n1=st.integers(1, 50), n2=st.integers(1, 50))
+@settings(**SET)
+def test_roofline_linear_solver_recovers_exact(a, b, c, n1, n2):
+    names = ["x", "y"]
+    counts = [{"x": 1, "y": 1}, {"x": 2, "y": 1}, {"x": 1, "y": 2}]
+    vals = [a + b * ct["x"] + c * ct["y"] for ct in counts]
+    coefs = roofline.solve_linear(counts, names, vals)
+    got = roofline.evaluate_linear(coefs, {"x": n1, "y": n2})
+    np.testing.assert_allclose(got, a + b * n1 + c * n2, rtol=1e-6)
+
+
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(2, 40),
+       C=st.integers(2, 6))
+@settings(**SET)
+def test_observation_within_feature_hull(seed, n, C):
+    """Observations are averages -> bounded by per-dim min/max of features."""
+    k = jax.random.PRNGKey(seed)
+    f = jax.random.normal(k, (n, 3))
+    y = jax.random.randint(jax.random.PRNGKey(seed ^ 1), (n,), 0, C)
+    obs, valid = prototypes.observations(k, f, y, C, n_avg=3)
+    lo, hi = f.min(axis=0), f.max(axis=0)
+    v = np.asarray(valid)
+    o = np.asarray(obs[0])[v]
+    assert (o >= np.asarray(lo)[None] - 1e-5).all()
+    assert (o <= np.asarray(hi)[None] + 1e-5).all()

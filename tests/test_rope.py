@@ -1,0 +1,68 @@
+"""RoPE variants: norm preservation, relative-position property, M-RoPE
+text-degeneracy, ChatGLM partial rotation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nn import rope
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _x(B=2, S=8, H=2, D=16):
+    return jax.random.normal(KEY, (B, S, H, D))
+
+
+def test_rope_preserves_norm():
+    x = _x()
+    pos = rope.default_positions(2, 8, "rope")
+    y = rope.apply_rope(x, pos, theta=1e4, kind="rope")
+    np.testing.assert_allclose(jnp.linalg.norm(y, axis=-1),
+                               jnp.linalg.norm(x, axis=-1), rtol=1e-5)
+
+
+def test_rope_zero_position_is_identity():
+    x = _x()
+    pos = jnp.zeros((2, 8), jnp.int32)
+    y = rope.apply_rope(x, pos, theta=1e4, kind="rope")
+    np.testing.assert_allclose(y, x, atol=1e-6)
+
+
+def test_rope_relative_property():
+    """<R(p)q, R(p+k)v> depends only on k (per head)."""
+    q = jax.random.normal(KEY, (1, 1, 1, 32))
+    v = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 32))
+    def dot_at(p, k):
+        qp = rope.apply_rope(q, jnp.array([[p]]), theta=1e4, kind="rope")
+        vp = rope.apply_rope(v, jnp.array([[p + k]]), theta=1e4, kind="rope")
+        return float(jnp.sum(qp * vp))
+    np.testing.assert_allclose(dot_at(0, 5), dot_at(17, 5), rtol=1e-4)
+    np.testing.assert_allclose(dot_at(3, 11), dot_at(40, 11), rtol=1e-4)
+
+
+def test_mrope_equals_rope_for_text():
+    """Text tokens have t == h == w -> M-RoPE must coincide with RoPE."""
+    x = _x()
+    p1 = rope.default_positions(2, 8, "rope", offset=3)
+    p3 = rope.default_positions(2, 8, "mrope", offset=3)
+    y1 = rope.apply_rope(x, p1, theta=1e4, kind="rope")
+    y3 = rope.apply_rope(x, p3, theta=1e4, kind="mrope")
+    np.testing.assert_allclose(y1, y3, atol=1e-5)
+
+
+def test_mrope_sections_use_different_components():
+    x = jnp.ones((1, 1, 1, 32))
+    p_a = jnp.array([[[5, 0, 0]]], jnp.int32)   # only t differs
+    p_b = jnp.array([[[0, 0, 5]]], jnp.int32)   # only w differs
+    ya = rope.apply_rope(x, p_a, theta=1e4, kind="mrope")
+    yb = rope.apply_rope(x, p_b, theta=1e4, kind="mrope")
+    assert not np.allclose(ya, yb)
+
+
+def test_rope2d_rotates_only_half():
+    x = _x(D=16)
+    pos = rope.default_positions(2, 8, "rope2d", offset=1)
+    y = rope.apply_rope(x, pos, theta=1e4, kind="rope2d")
+    # pass-through half untouched (ChatGLM partial rotary)
+    np.testing.assert_allclose(y[..., 8:], x[..., 8:], atol=1e-7)
+    assert not np.allclose(y[..., :8], x[..., :8])

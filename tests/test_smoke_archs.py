@@ -1,0 +1,103 @@
+"""Per-architecture smoke tests (deliverable f): a REDUCED variant of each
+assigned arch family runs one forward and one CoRS train step on CPU with
+correct output shapes and no NaNs. Full configs are exercised only via the
+dry-run (launch/dryrun.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.launch import train as train_lib
+from repro.types import CollabConfig
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 32
+
+
+def _batch(cfg, key):
+    batch = {"labels": jax.random.randint(key, (1, B, S), 0,
+                                          cfg.vocab_size)}
+    if cfg.input_kind == "tokens":
+        batch["tokens"] = jax.random.randint(key, (1, B, S), 0,
+                                             cfg.vocab_size)
+    else:
+        batch["embeddings"] = jax.random.normal(key, (1, B, S, cfg.d_model))
+    if cfg.is_encoder_decoder:
+        batch["tokens"] = jax.random.randint(key, (1, B, S), 0,
+                                             cfg.vocab_size)
+        batch["frames"] = jax.random.normal(key, (1, B, cfg.encoder_seq,
+                                                  cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_reduced_forward_and_train_step(arch):
+    cfg = ARCHS[arch].reduced()
+    assert cfg.num_layers == 2 and cfg.d_model <= 512
+    if cfg.num_experts:
+        assert cfg.num_experts <= 4
+    ccfg = CollabConfig(mode="cors", num_classes=cfg.vocab_size,
+                        d_feature=cfg.d_feature, num_negatives=32,
+                        lambda_kd=1.0, lambda_disc=0.1)
+    step = train_lib.make_train_step(cfg, ccfg, n_clients=1, disc_tokens=16)
+    state = train_lib.init_state(cfg, KEY, n_clients=1)
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+
+    # forward shape check via the loss-internal model output
+    loss_fn = train_lib.make_loss_fn(cfg, ccfg, disc_tokens=16)
+    out = train_lib._lm_outputs(cfg, jax.tree.map(lambda p: p[0],
+                                                  state.params),
+                                jax.tree.map(lambda b: b[0], batch))
+    assert out["logits"].shape == (B, S, cfg.vocab_size)
+    assert out["features"].shape == (B, S, cfg.d_model)
+    assert np.all(np.isfinite(np.asarray(out["logits"],
+                                         dtype=np.float32)))
+
+    new_state, metrics = jax.jit(step)(state, batch, jax.random.PRNGKey(2))
+    assert np.isfinite(float(metrics["total"]))
+    assert np.isfinite(float(metrics["ce"]))
+    assert np.isfinite(float(metrics["kd"]))
+    assert np.isfinite(float(metrics["disc"]))
+    # one Adam step actually changed the params
+    diff = jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))),
+        state.params, new_state.params))
+    assert max(diff) > 0
+    # prototype stats accumulated
+    assert float(new_state.proto.count.sum()) == B * S
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_reduced_serve_decode(arch):
+    from repro.launch import serve as serve_lib
+    from repro.types import ShapeConfig
+    cfg = ARCHS[arch].reduced()
+    shape = ShapeConfig("t", seq_len=16, global_batch=2, mode="decode")
+    params = (serve_lib.params_shapes(cfg), )  # shapes only (cheap check)
+    # real decode
+    import repro.models.encdec as encdec
+    import repro.models.lm as lm
+    key = jax.random.PRNGKey(0)
+    if cfg.is_encoder_decoder:
+        p = encdec.init_encdec(key, cfg)
+        caches = {"self": encdec.init_self_cache(cfg, 2, 16),
+                  "cross": (jnp.zeros((cfg.num_layers, 2, cfg.encoder_seq,
+                                       cfg.num_kv_heads, cfg.head_dim)),
+                            jnp.zeros((cfg.num_layers, 2, cfg.encoder_seq,
+                                       cfg.num_kv_heads, cfg.head_dim)))}
+        step = serve_lib.make_decode_step(cfg)
+        out = jax.jit(step)(p, {"tokens": jnp.zeros((2, 1), jnp.int32)},
+                            caches)
+    else:
+        p = lm.init_lm(key, cfg)
+        caches = lm.init_cache(cfg, 2, 16)
+        step = serve_lib.make_decode_step(cfg)
+        if cfg.input_kind == "tokens":
+            batch = {"tokens": jnp.zeros((2, 1), jnp.int32)}
+        else:
+            batch = {"embeddings": jnp.zeros((2, 1, cfg.d_model))}
+        out = jax.jit(step)(p, batch, caches)
+    assert out["logits"].shape == (2, 1, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(out["logits"], np.float32)))

@@ -1,0 +1,109 @@
+"""End-to-end behaviour of the paper's system (CollabTrainer + RelayServer).
+
+Short-horizon integration: these verify mechanism, not paper-scale accuracy
+(benchmarks/ reproduce the tables at full round counts).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines, client as client_lib, collab, comm
+from repro.data import partition, synthetic
+from repro.models import cnn
+from repro.types import CollabConfig, TrainConfig
+
+SPEC = client_lib.ClientSpec(
+    apply=lambda p, x: cnn.apply(p, x),
+    head=lambda p: (p["head_w"], p["head_b"]))
+
+
+def _setup(n_clients=2, n=400, mode="cors", **ck):
+    x, y = synthetic.class_images(n, seed=0, noise=0.4)
+    tx, ty = synthetic.class_images(500, seed=9, noise=0.4)
+    parts = partition.uniform_split(x, y, n_clients, seed=1)
+    ccfg = CollabConfig(mode=mode, num_classes=10, d_feature=84, **ck)
+    tcfg = TrainConfig(batch_size=32)
+    params = [cnn.init_cnn(k)
+              for k in jax.random.split(jax.random.PRNGKey(0), n_clients)]
+    return collab.CollabTrainer([SPEC] * n_clients, params, parts, (tx, ty),
+                                ccfg, tcfg, seed=0)
+
+
+def test_cors_learns_above_chance():
+    tr = _setup(mode="cors", lambda_kd=2.0, lambda_disc=1.0)
+    for _ in range(4):
+        rec = tr.run_round()
+    assert rec["acc_mean"] > 0.25          # 10 classes, chance = 0.1
+    m = rec["metrics"][0]
+    assert np.isfinite(m["kd"]) and np.isfinite(m["disc"])
+
+
+def test_cors_comm_matches_formula():
+    tr = _setup(mode="cors")
+    tr.run_round()
+    up, down = comm.cors_round_floats(10, 84, 1, 1, 2)
+    assert tr.ledger.by_round[0] == (up, down)
+
+
+def test_il_has_zero_comm():
+    tr = _setup(mode="il")
+    tr.run_round()
+    assert tr.ledger.total_bytes == 0.0
+
+
+def test_fedavg_syncs_models():
+    tr = _setup(mode="fedavg")
+    tr.run_round()
+    p0, p1 = tr.clients[0].params, tr.clients[1].params
+    for a, b in zip(jax.tree.leaves(p0), jax.tree.leaves(p1)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+def test_fedavg_aggregate_is_mean():
+    ps = [{"w": jnp.ones((2, 2)) * v} for v in (1.0, 3.0)]
+    avg = baselines.fedavg_aggregate(ps)
+    np.testing.assert_allclose(avg["w"], 2.0)
+
+
+def test_fd_mode_shares_logit_means():
+    tr = _setup(mode="fd", lambda_kd=1.0)
+    tr.run_round()
+    tr.run_round()
+    assert hasattr(tr.server, "mean_logits")
+    assert tr.server.mean_logits.shape == (10, 10)
+
+
+def test_relay_excludes_own_observations():
+    tr = _setup(mode="cors")
+    tr.run_round()
+    srv = tr.server
+    owners = {o["owner"] for o in srv.obs_buffer}
+    assert 1 in owners
+
+
+def test_server_is_relay_only():
+    """The server never holds or touches model weights (paper's design)."""
+    tr = _setup(mode="cors")
+    tr.run_round()
+    assert not hasattr(tr.server, "model")
+    assert not hasattr(tr.server, "params")
+
+
+def test_heterogeneous_architectures_collaborate():
+    """CoRS works across different client model architectures (the paper's
+    tunable-collaboration selling point; FedAvg cannot do this)."""
+    x, y = synthetic.class_images(300, seed=0, noise=0.4)
+    tx, ty = synthetic.class_images(200, seed=9, noise=0.4)
+    parts = partition.uniform_split(x, y, 2, seed=1)
+    keys = jax.random.split(jax.random.PRNGKey(0), 2)
+    params = [cnn.init_cnn(keys[0], width=1),
+              cnn.init_cnn(keys[1], width=2)]       # different capacity
+    ccfg = CollabConfig(mode="cors", num_classes=10, d_feature=84,
+                        lambda_kd=2.0, lambda_disc=1.0)
+    tr = collab.CollabTrainer([SPEC] * 2, params, parts, (tx, ty), ccfg,
+                              TrainConfig(batch_size=32), seed=0)
+    rec = tr.run_round()
+    assert np.isfinite(rec["acc_mean"])
+    rec = tr.run_round()
+    assert np.isfinite(rec["metrics"][1]["disc"])
