@@ -8,9 +8,9 @@ from typing import Dict, List
 import jax
 import numpy as np
 
-from repro.core import client as client_lib, collab
+from repro.core import client as client_lib, collab, vec_collab
 from repro.data import partition, synthetic
-from repro.models import cnn
+from repro.models import cnn, mlp
 from repro.types import CollabConfig, TrainConfig
 
 ROUNDS = int(os.environ.get("REPRO_BENCH_ROUNDS", "12"))
@@ -22,6 +22,10 @@ SPEC = client_lib.ClientSpec(
     apply=lambda p, x: cnn.apply(p, x),
     head=lambda p: (p["head_w"], p["head_b"]))
 
+MLP_SPEC = client_lib.ClientSpec(
+    apply=lambda p, x: mlp.apply(p, x),
+    head=lambda p: (p["head_w"], p["head_b"]))
+
 
 def data(seed=0):
     x, y = synthetic.class_images(N_TRAIN, seed=seed, noise=NOISE)
@@ -29,11 +33,18 @@ def data(seed=0):
     return (x, y), (tx, ty)
 
 
-def run_mode(mode: str, n_clients: int, rounds: int = None, *,
-             lambda_kd: float = 10.0, lambda_disc: float = 1.0,
-             seed: int = 0, width: int = 1) -> collab.CollabTrainer:
-    rounds = rounds or ROUNDS
-    (x, y), test = data(seed)
+def make_trainer(mode: str, n_clients: int, *, lambda_kd: float = 10.0,
+                 lambda_disc: float = 1.0, seed: int = 0, width: int = 1,
+                 engine: str = "vec", batch_size: int = 32,
+                 train_data=None, test_data=None, model: str = "cnn"):
+    """Build a trainer without running it. engine: "vec" (default — all the
+    homogeneous-client benchmarks go through the vectorized round step) or
+    "seq" (the per-client Python-loop oracle). model: "cnn" (paper's LeNet)
+    or "mlp" (cheap-compute client, see models/mlp.py)."""
+    if train_data is None or test_data is None:
+        (x, y), test = data(seed)
+    else:
+        (x, y), test = train_data, test_data
     if mode == "cl":
         parts = [(x, y)]
         n_clients = 1
@@ -45,11 +56,26 @@ def run_mode(mode: str, n_clients: int, rounds: int = None, *,
                         lambda_kd=lambda_kd if mode_eff in ("cors", "fd")
                         else 0.0,
                         lambda_disc=lambda_disc if mode_eff == "cors" else 0.0)
-    tcfg = TrainConfig(batch_size=32)
-    params = [cnn.init_cnn(k, width=width) for k in
-              jax.random.split(jax.random.PRNGKey(seed), n_clients)]
-    tr = collab.CollabTrainer([SPEC] * n_clients, params, parts, test,
-                              ccfg, tcfg, seed=seed)
+    tcfg = TrainConfig(batch_size=batch_size)
+    keys = jax.random.split(jax.random.PRNGKey(seed), n_clients)
+    if model == "mlp":
+        spec = MLP_SPEC
+        params = [mlp.init_mlp(k, hidden=64 * width) for k in keys]
+    else:
+        spec = SPEC
+        params = [cnn.init_cnn(k, width=width) for k in keys]
+    cls = (vec_collab.VectorizedCollabTrainer if engine == "vec"
+           else collab.CollabTrainer)
+    return cls([spec] * n_clients, params, parts, test, ccfg, tcfg, seed=seed)
+
+
+def run_mode(mode: str, n_clients: int, rounds: int = None, *,
+             lambda_kd: float = 10.0, lambda_disc: float = 1.0,
+             seed: int = 0, width: int = 1, engine: str = "vec"):
+    rounds = rounds or ROUNDS
+    tr = make_trainer(mode, n_clients, lambda_kd=lambda_kd,
+                      lambda_disc=lambda_disc, seed=seed, width=width,
+                      engine=engine)
     tr.run(rounds)
     return tr
 

@@ -19,7 +19,8 @@ def main() -> None:
     if quick and "REPRO_BENCH_ROUNDS" not in os.environ:
         os.environ["REPRO_BENCH_ROUNDS"] = "12"
     from benchmarks import (comm_cost, fig3_ablation, fig4_convergence,
-                            kernel_bench, roofline_table, table1_utility)
+                            kernel_bench, roofline_table, scaling_clients,
+                            table1_utility)
     t0 = time.time()
     print("== comm_cost (paper §Communication) ==")
     comm_cost.main()
@@ -31,6 +32,8 @@ def main() -> None:
     table1_utility.main(n_values=(2, 5) if quick else (2, 5, 10))
     print("\n== fig4_convergence (paper Fig. 4) ==")
     fig4_convergence.main(n_clients=5)
+    print("\n== scaling_clients (vectorized engine vs sequential oracle) ==")
+    scaling_clients.main(clients=(2, 8, 32) if quick else (2, 8, 32, 128))
     if not quick:
         print("\n== fig3_ablation (paper Fig. 3) ==")
         fig3_ablation.main(n_clients=5)

@@ -10,7 +10,7 @@ import os
 import jax
 
 from repro.checkpoint import save_pytree
-from repro.core import client as client_lib, collab
+from repro.core import client as client_lib, collab, vec_collab
 from repro.data import partition, synthetic
 from repro.models import cnn
 from repro.types import CollabConfig, TrainConfig
@@ -24,6 +24,9 @@ def main():
                     choices=["cors", "il", "fd", "fedavg"])
     ap.add_argument("--lambda-kd", type=float, default=2.0)
     ap.add_argument("--lambda-disc", type=float, default=1.0)
+    ap.add_argument("--engine", default="vec", choices=["vec", "seq"],
+                    help="vec = one vmapped round step over all clients "
+                         "(default); seq = per-client Python-loop oracle")
     ap.add_argument("--out", default="artifacts/collab_ckpt")
     args = ap.parse_args()
 
@@ -41,14 +44,17 @@ def main():
     ccfg = CollabConfig(mode=args.mode, num_classes=10, d_feature=84,
                         lambda_kd=args.lambda_kd,
                         lambda_disc=args.lambda_disc)
-    trainer = collab.CollabTrainer([spec] * args.clients, params, parts,
-                                   (tx, ty), ccfg, TrainConfig(batch_size=32),
-                                   seed=0)
+    cls = (vec_collab.VectorizedCollabTrainer if args.engine == "vec"
+           else collab.CollabTrainer)
+    trainer = cls([spec] * args.clients, params, parts,
+                  (tx, ty), ccfg, TrainConfig(batch_size=32), seed=0)
     trainer.run(args.rounds, log_every=max(1, args.rounds // 15))
 
     os.makedirs(args.out, exist_ok=True)
-    for i, c in enumerate(trainer.clients):
-        save_pytree(os.path.join(args.out, f"client{i}.npz"), c.params,
+    for i in range(args.clients):
+        p = (trainer.client_params(i) if args.engine == "vec"
+             else trainer.clients[i].params)
+        save_pytree(os.path.join(args.out, f"client{i}.npz"), p,
                     step=args.rounds)
     best = max(h["acc_mean"] for h in trainer.history)
     print(f"\nbest mean accuracy: {best:.4f}; "

@@ -1,2 +1,2 @@
 from repro.core import (baselines, client, collab, comm, losses, prototypes,
-                        server)  # noqa: F401
+                        server, vec_collab)  # noqa: F401

@@ -59,16 +59,33 @@ def loss_fn(spec: ClientSpec, params, batch, teacher, ccfg: CollabConfig,
     return total, metrics
 
 
-def make_local_update(spec: ClientSpec, ccfg: CollabConfig,
-                      tcfg: TrainConfig):
-    """Returns jitted fn(params, opt_state, batches, teacher, key) ->
+def empty_teacher(ccfg: CollabConfig) -> Dict:
+    """A no-op teacher pytree (IL/CL/FedAvg modes, round-0 defaults).
+
+    Same keys/shapes as `server.sample_teacher` so the jitted update traces
+    once regardless of mode."""
+    C, d = ccfg.num_classes, ccfg.d_feature
+    return {"global_protos": jnp.zeros((C, d), jnp.float32),
+            "valid_g": jnp.zeros((C,), bool),
+            "obs": jnp.zeros((max(1, ccfg.m_down), C, d), jnp.float32),
+            "valid_o": jnp.zeros((C,), bool),
+            "obs_pick": jnp.asarray(0, jnp.int32),
+            "mean_logits": jnp.zeros((C, C), jnp.float32)}
+
+
+def make_local_update_fn(spec: ClientSpec, ccfg: CollabConfig,
+                         tcfg: TrainConfig):
+    """Un-jitted fn(params, opt_state, batches, teacher, key) ->
     (params, opt_state, metrics). `batches` is a stacked pytree
-    (n_batches, bs, ...) scanned E local epochs (Algorithm 2)."""
+    (n_batches, bs, ...) scanned E local epochs (Algorithm 2).
+
+    The sequential trainer jits this per client (`make_local_update`); the
+    vectorized engine vmaps it over a stacked client axis inside one jitted
+    round step (core/vec_collab.py)."""
 
     grad_fn = jax.value_and_grad(
         lambda p, b, t, k: loss_fn(spec, p, b, t, ccfg, k), has_aux=True)
 
-    @jax.jit
     def run(params, opt_state, batches, teacher, key):
         n = jax.tree.leaves(batches)[0].shape[0]
         keys = jax.random.split(key, n * tcfg.local_epochs).reshape(
@@ -91,6 +108,12 @@ def make_local_update(spec: ClientSpec, ccfg: CollabConfig,
         return params, opt_state, metrics
 
     return run
+
+
+def make_local_update(spec: ClientSpec, ccfg: CollabConfig,
+                      tcfg: TrainConfig):
+    """Jitted `make_local_update_fn` (the per-client sequential path)."""
+    return jax.jit(make_local_update_fn(spec, ccfg, tcfg))
 
 
 def compute_uploads(spec: ClientSpec, params, data_x, data_y,

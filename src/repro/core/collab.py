@@ -5,6 +5,14 @@ partitions, optimizers and round accounting, so benchmarks/table1_utility.py
 reproduces the paper's Table 1 comparison semantics. Clients may have
 heterogeneous architectures in CoRS/FD modes (a selling point of the paper);
 FedAvg requires homogeneous models and asserts so.
+
+This sequential trainer is the ORACLE: it steps clients one-by-one and is
+the only path that supports heterogeneous client architectures. Rounds are
+synchronous (paper Algorithm 1 cadence): every client downloads from the
+relay state of the PREVIOUS round, then all upload — so the vectorized
+engine (core/vec_collab.py), which runs all clients in one vmapped step,
+evolves the exact same relay state given the same seeds (see
+`round_keys` for the shared per-round key schedule).
 """
 from __future__ import annotations
 
@@ -18,6 +26,16 @@ import numpy as np
 from repro.core import baselines, client as client_lib, comm, server as server_lib
 from repro.optim import adam_init
 from repro.types import CollabConfig, TrainConfig
+
+
+def round_keys(key, n: int):
+    """Canonical per-round key schedule, shared with the vectorized engine:
+    one relay, one update and one upload key per client, drawn from three
+    independent folds of the round key. Returns (next_key, relay (n,2),
+    update (n,2), upload (n,2))."""
+    key, kr, ku, ko = jax.random.split(key, 4)
+    return (key, jax.random.split(kr, n), jax.random.split(ku, n),
+            jax.random.split(ko, n))
 
 
 @dataclass
@@ -42,11 +60,15 @@ class CollabTrainer:
                         data_x=x, data_y=y)
             for s, p, (x, y) in zip(specs, params_list, client_data)]
         self.test_x, self.test_y = test_data
-        self.server = server_lib.RelayServer(ccfg, ccfg.d_feature, seed)
+        self.server = server_lib.RelayServer(ccfg, ccfg.d_feature, seed,
+                                             n_clients=len(specs))
         self.ledger = comm.CommLedger()
         self.key = jax.random.PRNGKey(seed)
         self._updaters = [client_lib.make_local_update(c.spec, ccfg, tcfg)
                           for c in self.clients]
+        # one jitted eval fn per distinct spec (not per call: re-jitting a
+        # fresh lambda every evaluate() recompiled every round)
+        self._eval_cache: Dict[client_lib.ClientSpec, Callable] = {}
         self.history: List[Dict] = []
 
     # ------------------------------------------------------------------
@@ -57,45 +79,36 @@ class CollabTrainer:
         ys = c.data_y[:n].reshape(-1, bs)
         return {"x": xs, "y": ys}
 
-    def _nextkey(self):
-        self.key, k = jax.random.split(self.key)
-        return k
-
-    def _empty_teacher(self):
-        C, d = self.ccfg.num_classes, self.ccfg.d_feature
-        return {"global_protos": jnp.zeros((C, d), jnp.float32),
-                "valid_g": jnp.zeros((C,), bool),
-                "obs": jnp.zeros((max(1, self.ccfg.m_down), C, d), jnp.float32),
-                "valid_o": jnp.zeros((C,), bool),
-                "obs_pick": jnp.asarray(0, jnp.int32),
-                "mean_logits": jnp.zeros((C, C), jnp.float32)}
-
     # ------------------------------------------------------------------
     def run_round(self) -> Dict:
         ccfg = self.ccfg
         mode = ccfg.mode
         N = len(self.clients)
-        self.server.begin_round()
+        self.key, relay_ks, upd_ks, upl_ks = round_keys(self.key, N)
+
+        # phase 1 — downlink: every client sees last round's relay state
+        if mode in ("cors", "fd"):
+            teachers = [self.server.relay(i, max(1, ccfg.m_down), relay_ks[i])
+                        for i in range(N)]
+        else:
+            teachers = [client_lib.empty_teacher(ccfg)] * N
+
+        # phase 2 — local updates (Algorithm 2)
         metrics_all = []
         for i, c in enumerate(self.clients):
-            if mode in ("cors", "fd"):
-                teacher = self.server.relay(i, max(1, ccfg.m_down),
-                                            self._nextkey())
-                t = self._empty_teacher()
-                t.update(teacher)
-                teacher = t
-            else:
-                teacher = self._empty_teacher()
             c.params, c.opt_state, m = self._updaters[i](
-                c.params, c.opt_state, self._batches(c), teacher,
-                self._nextkey())
+                c.params, c.opt_state, self._batches(c), teachers[i],
+                upd_ks[i])
             metrics_all.append(jax.tree.map(float, m))
-            if mode in ("cors", "fd"):
+
+        # phase 3 — uplink + server merge (Algorithm 1)
+        if mode in ("cors", "fd"):
+            self.server.begin_round()
+            for i, c in enumerate(self.clients):
                 payload = client_lib.compute_uploads(
-                    c.spec, c.params, c.data_x, c.data_y, ccfg,
-                    self._nextkey())
+                    c.spec, c.params, c.data_x, c.data_y, ccfg, upl_ks[i])
                 self.server.upload(i, payload)
-        self.server.end_round()
+            self.server.end_round()
 
         if mode == "fedavg":
             avg = baselines.fedavg_aggregate([c.params for c in self.clients])
@@ -131,10 +144,17 @@ class CollabTrainer:
         return self.history
 
     # ------------------------------------------------------------------
+    def _eval_fn(self, spec: client_lib.ClientSpec):
+        fn = self._eval_cache.get(spec)
+        if fn is None:
+            fn = jax.jit(lambda p, x: spec.apply(p, x)[1])
+            self._eval_cache[spec] = fn
+        return fn
+
     def evaluate(self, c: ClientState, batch: int = 512) -> float:
         n = self.test_x.shape[0]
         correct = 0
-        apply = jax.jit(lambda p, x: c.spec.apply(p, x)[1])
+        apply = self._eval_fn(c.spec)
         for i in range(0, n, batch):
             lg = apply(c.params, self.test_x[i:i + batch])
             correct += int(jnp.sum(jnp.argmax(lg, -1)

@@ -1,1 +1,1 @@
-from repro.models import cnn, encdec, lm  # noqa: F401
+from repro.models import cnn, encdec, lm, mlp  # noqa: F401

@@ -1,0 +1,51 @@
+"""Small MLP client — the cheap-compute counterpart of models/cnn.py.
+
+Same f_u = τ_u ∘ φ_u contract as the CNN (features returns the d'-dim
+representation CoRS shares; tanh-bounded for the same λ_KD-scaling reason —
+see cnn.features). Being all-matmul it vmaps over a stacked client axis with
+near-perfect efficiency, which makes it the right instrument for measuring
+ENGINE overhead (benchmarks/scaling_clients.py): with the LeNet, conv FLOPs
+saturate a small CPU in both engines and hide the dispatch savings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import layers
+
+
+def init_mlp(key, *, num_classes: int = 10, d_feature: int = 84,
+             d_in: int = 784, hidden: int = 64):
+    ks = layers.split(key, 3)
+    return {
+        "w1": layers.dense_init(ks[0], d_in, hidden, jnp.float32),
+        "b1": jnp.zeros((hidden,)),
+        "w2": layers.dense_init(ks[1], hidden, d_feature, jnp.float32),
+        "b2": jnp.zeros((d_feature,)),
+        # τ_u — the linear classifier (W_u, b_u) of the paper
+        "head_w": layers.dense_init(ks[2], d_feature, num_classes,
+                                    jnp.float32),
+        "head_b": jnp.zeros((num_classes,)),
+    }
+
+
+def features(params, x):
+    """φ_u: x (B, ...) flattened -> s (B, d')."""
+    h = x.reshape(x.shape[0], -1)
+    h = jax.nn.relu(h @ params["w1"] + params["b1"])
+    return jnp.tanh(h @ params["w2"] + params["b2"])
+
+
+def classify(params, s):
+    """τ_u: s (B, d') -> logits (B, C)."""
+    return s @ params["head_w"] + params["head_b"]
+
+
+def apply(params, x):
+    s = features(params, x)
+    return s, classify(params, s)
+
+
+def num_params(params) -> int:
+    return sum(int(p.size) for p in jax.tree.leaves(params))

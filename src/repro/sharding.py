@@ -16,6 +16,23 @@ from typing import Optional, Sequence
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+# Version-compat shard_map: `jax.shard_map` is the stable name on newer jax;
+# older releases only ship it under jax.experimental. Import it from here
+# (tests and core/vec_collab.py do) so the rest of the codebase is
+# version-agnostic.
+try:
+    shard_map = jax.shard_map
+except AttributeError:                              # jax < 0.6
+    from jax.experimental.shard_map import shard_map  # type: ignore
+
+
+def client_mesh(n_devices: Optional[int] = None) -> Mesh:
+    """1-D device mesh with a "clients" axis for the vectorized collab
+    engine (vec_collab.py): the stacked client axis is sharded over it and
+    the prototype merge becomes a psum. Defaults to all local devices."""
+    n = n_devices or len(jax.devices())
+    return jax.make_mesh((n,), ("clients",))
+
 
 def axis_size(mesh: Mesh, name: str) -> int:
     return mesh.shape[name] if name in mesh.axis_names else 1

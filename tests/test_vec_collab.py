@@ -1,0 +1,214 @@
+"""Vectorized multi-client engine: equivalence with the sequential oracle,
+ring-buffer mechanics, and the relay's degenerate-pool behavior."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import sharding
+from repro.core import client as client_lib, collab, server as server_lib, \
+    vec_collab
+from repro.data import partition, synthetic
+from repro.models import cnn, mlp
+from repro.types import CollabConfig, TrainConfig
+
+SPEC = client_lib.ClientSpec(
+    apply=lambda p, x: cnn.apply(p, x),
+    head=lambda p: (p["head_w"], p["head_b"]))
+
+MLP_SPEC = client_lib.ClientSpec(
+    apply=lambda p, x: mlp.apply(p, x),
+    head=lambda p: (p["head_w"], p["head_b"]))
+
+
+def _build(mode, engine, n_clients=2, n=384, seed=0, mesh=None):
+    x, y = synthetic.class_images(n, seed=0, noise=0.4)
+    tx, ty = synthetic.class_images(256, seed=9, noise=0.4)
+    parts = partition.uniform_split(x, y, n_clients, seed=1)
+    ccfg = CollabConfig(mode=mode, num_classes=10, d_feature=84,
+                        lambda_kd=2.0 if mode in ("cors", "fd") else 0.0,
+                        lambda_disc=1.0 if mode == "cors" else 0.0)
+    tcfg = TrainConfig(batch_size=32)
+    params = [cnn.init_cnn(k)
+              for k in jax.random.split(jax.random.PRNGKey(seed), n_clients)]
+    if engine == "seq":
+        return collab.CollabTrainer([SPEC] * n_clients, params, parts,
+                                    (tx, ty), ccfg, tcfg, seed=seed)
+    return vec_collab.VectorizedCollabTrainer(
+        [SPEC] * n_clients, params, parts, (tx, ty), ccfg, tcfg, seed=seed,
+        mesh=mesh)
+
+
+# ---------------------------------------------------------------------------
+# tentpole: the vectorized engine IS the sequential oracle, batched
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("mode", ["cors", "fd", "il", "fedavg"])
+def test_vectorized_matches_sequential(mode):
+    """Same seeds/partitions -> per-round acc within float tolerance and
+    IDENTICAL comm-ledger floats, for every mode. Both engines share the
+    relay state functions and the round key schedule, so the only slack is
+    vmap-batched float association."""
+    seq = _build(mode, "seq")
+    vec = _build(mode, "vec")
+    for _ in range(3):
+        rs, rv = seq.run_round(), vec.run_round()
+        assert abs(rs["acc_mean"] - rv["acc_mean"]) < 2e-2
+        np.testing.assert_allclose(rs["accs"], rv["accs"], atol=2e-2)
+    assert seq.ledger.by_round == vec.ledger.by_round
+    assert seq.ledger.total_bytes == vec.ledger.total_bytes
+
+
+def test_vectorized_metrics_match_sequential():
+    seq = _build("cors", "seq")
+    vec = _build("cors", "vec")
+    ms = seq.run_round()["metrics"]
+    mv = vec.run_round()["metrics"]
+    assert [sorted(m) for m in ms] == [sorted(m) for m in mv]
+    for a, b in zip(ms, mv):
+        for k in a:
+            np.testing.assert_allclose(a[k], b[k], rtol=1e-3, atol=1e-5)
+
+
+def test_vectorized_is_model_agnostic():
+    """The engine takes any ClientSpec: equivalence also holds for the MLP
+    client used by benchmarks/scaling_clients.py."""
+    x, y = synthetic.class_images(256, seed=0, noise=0.4)
+    tx, ty = synthetic.class_images(128, seed=9, noise=0.4)
+    parts = partition.uniform_split(x, y, 4, seed=1)
+    ccfg = CollabConfig(mode="cors", num_classes=10, d_feature=84,
+                        lambda_kd=2.0, lambda_disc=1.0)
+    tcfg = TrainConfig(batch_size=32)
+    params = [mlp.init_mlp(k)
+              for k in jax.random.split(jax.random.PRNGKey(0), 4)]
+    seq = collab.CollabTrainer([MLP_SPEC] * 4, params, parts, (tx, ty),
+                               ccfg, tcfg, seed=0)
+    vec = vec_collab.VectorizedCollabTrainer(
+        MLP_SPEC, params, parts, (tx, ty), ccfg, tcfg, seed=0)
+    for _ in range(2):
+        rs, rv = seq.run_round(), vec.run_round()
+        np.testing.assert_allclose(rs["accs"], rv["accs"], atol=2e-2)
+    assert seq.ledger.by_round == vec.ledger.by_round
+
+
+def test_vectorized_shard_map_path_matches():
+    """mesh path (shard_map over the "clients" axis + psum merge) computes
+    the same rounds as the plain vmap path."""
+    plain = _build("cors", "vec")
+    mesh = sharding.client_mesh(1)
+    mapped = _build("cors", "vec", mesh=mesh)
+    for _ in range(2):
+        rp, rm = plain.run_round(), mapped.run_round()
+        np.testing.assert_allclose(rp["acc_mean"], rm["acc_mean"], atol=2e-2)
+
+
+def test_vectorized_rejects_heterogeneous_specs():
+    other = client_lib.ClientSpec(
+        apply=lambda p, x: cnn.apply(p, x),
+        head=lambda p: (p["head_w"], p["head_b"]))
+    x, y = synthetic.class_images(64, seed=0)
+    parts = partition.uniform_split(x, y, 2, seed=1)
+    params = [cnn.init_cnn(k) for k in
+              jax.random.split(jax.random.PRNGKey(0), 2)]
+    with pytest.raises(AssertionError):
+        vec_collab.VectorizedCollabTrainer(
+            [SPEC, other], params, parts, (x, y),
+            CollabConfig(num_classes=10, d_feature=84), TrainConfig())
+
+
+def test_client_params_roundtrip():
+    vec = _build("il", "vec")
+    p0 = vec.client_params(0)
+    assert set(p0) == set(cnn.init_cnn(jax.random.PRNGKey(0)))
+    assert p0["head_w"].shape == (84, 10)
+
+
+# ---------------------------------------------------------------------------
+# ring buffer mechanics
+# ---------------------------------------------------------------------------
+def _tiny_state(cap=4, C=3, d=2, m_down=1):
+    ccfg = CollabConfig(num_classes=C, d_feature=d, m_down=m_down)
+    return server_lib.init_relay_state(ccfg, d, seed=0, capacity=cap)
+
+
+def test_ring_buffer_appends_in_order_and_wraps():
+    st = _tiny_state(cap=4)
+    assert int(st.ptr) == 1                       # one seeded slot
+    rows = lambda v, k: jnp.full((k, 3, 2), float(v))
+    vrows = lambda k: jnp.ones((k, 3), bool)
+    st = server_lib.buffer_append(st, rows(1.0, 2), vrows(2),
+                                  jnp.full((2,), 0, jnp.int32))
+    st = server_lib.buffer_append(st, rows(2.0, 2), vrows(2),
+                                  jnp.full((2,), 1, jnp.int32))
+    # 1 seed + 4 uploads into cap=4: the wrap overwrote slot 0 (the seed)
+    assert int(st.ptr) == 1
+    np.testing.assert_array_equal(np.asarray(st.owner), [1, 0, 0, 1])
+    np.testing.assert_allclose(st.obs[0], 2.0)    # newest won the slot
+    assert not bool(jnp.any(st.owner == server_lib.EMPTY_OWNER))
+
+
+def test_sample_teacher_excludes_own_uploads():
+    st = _tiny_state(cap=4)
+    # fill: client 0's rows are all-zeros, client 1's rows are all-ones
+    st = st._replace(
+        obs=jnp.stack([jnp.zeros((3, 2)), jnp.zeros((3, 2)),
+                       jnp.ones((3, 2)), jnp.ones((3, 2))]),
+        valid=jnp.ones((4, 3), bool),
+        owner=jnp.asarray([0, 0, 1, 1], jnp.int32))
+    for s in range(8):
+        t = server_lib.sample_teacher(st, 0, 2, jax.random.PRNGKey(s))
+        np.testing.assert_allclose(t["obs"], 1.0)  # never its own (zeros)
+        t = server_lib.sample_teacher(st, 1, 2, jax.random.PRNGKey(s))
+        np.testing.assert_allclose(t["obs"], 0.0)
+
+
+def test_sample_teacher_falls_back_to_own_pool():
+    """All filled slots owned by the requester -> fall back to the whole
+    filled buffer rather than crashing or returning garbage."""
+    st = _tiny_state(cap=2)
+    st = st._replace(owner=jnp.asarray([0, server_lib.EMPTY_OWNER],
+                                       jnp.int32),
+                     valid=st.valid.at[0].set(True))
+    t = server_lib.sample_teacher(st, 0, 3, jax.random.PRNGKey(0))
+    assert t["obs"].shape == (3, 3, 2)
+    np.testing.assert_allclose(t["obs"], np.broadcast_to(st.obs[0], (3, 3, 2)))
+    assert bool(jnp.all(t["valid_o"]))
+
+
+# ---------------------------------------------------------------------------
+# regression: relay before ANY upload is well-formed (the old list server
+# synthesized a fallback entry without an "owner" key)
+# ---------------------------------------------------------------------------
+def test_relay_before_any_upload_is_well_formed():
+    ccfg = CollabConfig(num_classes=5, d_feature=3, m_down=2)
+    srv = server_lib.RelayServer(ccfg, 3, seed=0)
+    t = srv.relay(0, 2, jax.random.PRNGKey(0))
+    assert set(t) == {"global_protos", "valid_g", "obs", "valid_o",
+                      "obs_pick", "mean_logits"}
+    assert t["obs"].shape == (2, 5, 3)
+    assert t["mean_logits"].shape == (5, 5)
+    assert bool(jnp.all(jnp.isfinite(t["obs"])))
+    # every buffer entry — including server-seeded ones — carries an owner
+    assert all("owner" in o for o in srv.obs_buffer)
+    assert {o["owner"] for o in srv.obs_buffer} == {server_lib.SEED_OWNER}
+
+
+def test_relay_on_fully_empty_buffer_returns_invalid_teacher():
+    ccfg = CollabConfig(num_classes=4, d_feature=2, m_down=1)
+    st = server_lib.init_relay_state(ccfg, 2, capacity=3)
+    st = st._replace(owner=jnp.full((3,), server_lib.EMPTY_OWNER, jnp.int32))
+    t = server_lib.sample_teacher(st, 0, 1, jax.random.PRNGKey(0))
+    np.testing.assert_allclose(t["obs"], 0.0)
+    assert not bool(jnp.any(t["valid_o"]))
+
+
+# ---------------------------------------------------------------------------
+# satellite: evaluate() must not re-jit per round
+# ---------------------------------------------------------------------------
+def test_evaluate_caches_one_fn_per_spec():
+    tr = _build("il", "seq", n_clients=2)
+    tr.run_round()
+    tr.run_round()
+    assert len(tr._eval_cache) == 1               # both clients share SPEC
+    fn = tr._eval_cache[SPEC]
+    tr.run_round()
+    assert tr._eval_cache[SPEC] is fn
