@@ -36,11 +36,15 @@ def data(seed=0):
 def make_trainer(mode: str, n_clients: int, *, lambda_kd: float = 10.0,
                  lambda_disc: float = 1.0, seed: int = 0, width: int = 1,
                  engine: str = "vec", batch_size: int = 32,
-                 train_data=None, test_data=None, model: str = "cnn"):
+                 train_data=None, test_data=None, model: str = "cnn",
+                 policy=None, participation=None):
     """Build a trainer without running it. engine: "vec" (default — all the
     homogeneous-client benchmarks go through the vectorized round step) or
     "seq" (the per-client Python-loop oracle). model: "cnn" (paper's LeNet)
-    or "mlp" (cheap-compute client, see models/mlp.py)."""
+    or "mlp" (cheap-compute client, see models/mlp.py). policy /
+    participation: relay-policy and participation-schedule specs forwarded
+    to the trainer (see repro.relay.get_policy / get_schedule), e.g.
+    policy="per_class", participation="uniform_k:8"."""
     if train_data is None or test_data is None:
         (x, y), test = data(seed)
     else:
@@ -66,7 +70,8 @@ def make_trainer(mode: str, n_clients: int, *, lambda_kd: float = 10.0,
         params = [cnn.init_cnn(k, width=width) for k in keys]
     cls = (vec_collab.VectorizedCollabTrainer if engine == "vec"
            else collab.CollabTrainer)
-    return cls([spec] * n_clients, params, parts, test, ccfg, tcfg, seed=seed)
+    return cls([spec] * n_clients, params, parts, test, ccfg, tcfg, seed=seed,
+               policy=policy, schedule=participation)
 
 
 def run_mode(mode: str, n_clients: int, rounds: int = None, *,

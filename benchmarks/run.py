@@ -34,6 +34,8 @@ def main() -> None:
     fig4_convergence.main(n_clients=5)
     print("\n== scaling_clients (vectorized engine vs sequential oracle) ==")
     scaling_clients.main(clients=(2, 8, 32) if quick else (2, 8, 32, 128))
+    print("\n== participation sweep (partial client rounds, k/N savings) ==")
+    scaling_clients.participation_sweep(n_clients=16 if quick else 32)
     if not quick:
         print("\n== fig3_ablation (paper Fig. 3) ==")
         fig3_ablation.main(n_clients=5)

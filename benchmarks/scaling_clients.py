@@ -17,9 +17,17 @@ Model choice matters for what you measure:
     (~1.1-1.6x here), not dispatch; on accelerators the batched path wins.
 
   PYTHONPATH=src python -m benchmarks.scaling_clients \
-      [--clients 2,8,32,128] [--model mlp|cnn] [--rounds 3]
+      [--clients 2,8,32,128] [--model mlp|cnn] [--rounds 3] \
+      [--participation-sweep] [--participation-n 32]
 
 CSV to stdout: model,n_clients,engine,s_per_round,speedup_vs_seq.
+
+--participation-sweep instead measures partial client rounds (the
+relay/participation subsystem): at fixed N, k/N ∈ {0.25, 0.5, 1.0} clients
+per round via the uniform_k schedule. The vectorized engine compacts the
+round step to the k participants, so both wall-clock AND comm volume per
+round should fall ≈ linearly with k/N.
+CSV: model,n_clients,k,s_per_round,comm_mb_per_round,speedup_vs_full.
 """
 from __future__ import annotations
 
@@ -52,6 +60,31 @@ def bench(n_clients: int, engine: str, model: str, rounds: int) -> float:
     return time_rounds(tr, rounds)
 
 
+def participation_sweep(n_clients: int = 32, rounds: int = 3,
+                        model: str = "mlp", fractions=(0.25, 0.5, 1.0)):
+    """Partial-round savings: s/round and comm/round vs participants k."""
+    train = synthetic.class_images(PER_CLIENT * n_clients, seed=0, noise=0.8)
+    test = synthetic.class_images(N_TEST, seed=99, noise=0.8)
+    print("model,n_clients,k,s_per_round,comm_mb_per_round,speedup_vs_full")
+    results = {}
+    t_full = None
+    for frac in sorted(fractions, reverse=True):     # full first (baseline)
+        k = max(1, int(round(frac * n_clients)))
+        tr = common.make_trainer(
+            "cors", n_clients, engine="vec", model=model, batch_size=16,
+            train_data=train, test_data=test,
+            participation=f"uniform_k:{k}")
+        t = time_rounds(tr, rounds)
+        up, down = tr.ledger.by_round[-1]
+        comm_mb = 4 * (up + down) / 1e6
+        if t_full is None:
+            t_full = t
+        results[k] = (t, comm_mb, t_full / t)
+        print(f"{model},{n_clients},{k},{t:.4f},{comm_mb:.4f},"
+              f"{t_full / t:.2f}")
+    return results
+
+
 def main(clients=(2, 8, 32, 128), rounds: int = 3, model: str = "mlp"):
     print("model,n_clients,engine,s_per_round,speedup_vs_seq")
     results = {}
@@ -74,6 +107,14 @@ if __name__ == "__main__":
     ap.add_argument("--clients", default="2,8,32,128")
     ap.add_argument("--model", default="mlp", choices=["mlp", "cnn"])
     ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--participation-sweep", action="store_true",
+                    help="measure partial rounds (k/N in {0.25,0.5,1.0}) "
+                         "instead of the seq-vs-vec engine scaling")
+    ap.add_argument("--participation-n", type=int, default=32,
+                    help="N for the participation sweep")
     args = ap.parse_args()
-    main(tuple(int(c) for c in args.clients.split(",")), args.rounds,
-         args.model)
+    if args.participation_sweep:
+        participation_sweep(args.participation_n, args.rounds, args.model)
+    else:
+        main(tuple(int(c) for c in args.clients.split(",")), args.rounds,
+             args.model)

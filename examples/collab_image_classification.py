@@ -27,6 +27,13 @@ def main():
     ap.add_argument("--engine", default="vec", choices=["vec", "seq"],
                     help="vec = one vmapped round step over all clients "
                          "(default); seq = per-client Python-loop oracle")
+    ap.add_argument("--relay-policy", default="flat",
+                    help="server-side relay policy: flat | per_class | "
+                         "staleness[:lam] (see src/repro/relay/README.md)")
+    ap.add_argument("--participation", default="full",
+                    help="per-round client participation schedule: full | "
+                         "uniform_k:K | cyclic:K | bernoulli:P "
+                         "(e.g. uniform_k:2 = 2 random clients per round)")
     ap.add_argument("--out", default="artifacts/collab_ckpt")
     args = ap.parse_args()
 
@@ -34,7 +41,8 @@ def main():
     tx, ty = synthetic.class_images(2000, seed=99, noise=0.8)
     parts = partition.uniform_split(x, y, args.clients, seed=1)
     print(f"{args.clients} clients × {len(parts[0][0])} samples each, "
-          f"mode={args.mode}")
+          f"mode={args.mode}, relay={args.relay_policy}, "
+          f"participation={args.participation}")
 
     spec = client_lib.ClientSpec(
         apply=lambda p, xx: cnn.apply(p, xx),
@@ -47,7 +55,8 @@ def main():
     cls = (vec_collab.VectorizedCollabTrainer if args.engine == "vec"
            else collab.CollabTrainer)
     trainer = cls([spec] * args.clients, params, parts,
-                  (tx, ty), ccfg, TrainConfig(batch_size=32), seed=0)
+                  (tx, ty), ccfg, TrainConfig(batch_size=32), seed=0,
+                  policy=args.relay_policy, schedule=args.participation)
     trainer.run(args.rounds, log_every=max(1, args.rounds // 15))
 
     os.makedirs(args.out, exist_ok=True)

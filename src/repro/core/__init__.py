@@ -1,2 +1,9 @@
-from repro.core import (baselines, client, collab, comm, losses, prototypes,
-                        server, vec_collab)  # noqa: F401
+"""Core CoRS modules. Import submodules directly, e.g.
+`from repro.core import collab, prototypes`.
+
+Deliberately empty of eager submodule imports: the relay subsystem
+(repro.relay) depends on `repro.core.prototypes`, while `repro.core.collab`
+and `repro.core.vec_collab` depend on `repro.relay` — eagerly importing the
+trainers here would make ANY `repro.core.*` import (including prototypes,
+from inside relay) a circular one.
+"""

@@ -13,6 +13,13 @@ relay state of the PREVIOUS round, then all upload — so the vectorized
 engine (core/vec_collab.py), which runs all clients in one vmapped step,
 evolves the exact same relay state given the same seeds (see
 `round_keys` for the shared per-round key schedule).
+
+Server behavior is pluggable via `policy` (a repro.relay RelayPolicy spec:
+"flat" | "per_class" | "staleness") and `schedule` (a participation
+schedule: "full" | "uniform_k:K" | "cyclic:K" | "bernoulli:P"); absent
+clients are skipped entirely — no download, no update, no upload, no comm
+billed — which is the reference semantics the vectorized engine's masked
+client axis is tested against (tests/test_relay_policies.py).
 """
 from __future__ import annotations
 
@@ -23,7 +30,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import baselines, client as client_lib, comm, server as server_lib
+from repro import relay as relay_lib
+from repro.core import baselines, client as client_lib, comm
 from repro.optim import adam_init
 from repro.types import CollabConfig, TrainConfig
 
@@ -52,7 +60,8 @@ class CollabTrainer:
                  params_list: Sequence[Any],
                  client_data: Sequence[Tuple[jax.Array, jax.Array]],
                  test_data: Tuple[jax.Array, jax.Array],
-                 ccfg: CollabConfig, tcfg: TrainConfig, seed: int = 0):
+                 ccfg: CollabConfig, tcfg: TrainConfig, seed: int = 0,
+                 policy=None, schedule=None):
         assert len(specs) == len(params_list) == len(client_data)
         self.ccfg, self.tcfg = ccfg, tcfg
         self.clients = [
@@ -60,15 +69,20 @@ class CollabTrainer:
                         data_x=x, data_y=y)
             for s, p, (x, y) in zip(specs, params_list, client_data)]
         self.test_x, self.test_y = test_data
-        self.server = server_lib.RelayServer(ccfg, ccfg.d_feature, seed,
-                                             n_clients=len(specs))
+        self.policy = relay_lib.get_policy(policy)
+        self.schedule = relay_lib.get_schedule(schedule, seed=seed)
+        self.server = relay_lib.RelayServer(ccfg, ccfg.d_feature, seed,
+                                            n_clients=len(specs),
+                                            policy=self.policy)
         self.ledger = comm.CommLedger()
         self.key = jax.random.PRNGKey(seed)
         self._updaters = [client_lib.make_local_update(c.spec, ccfg, tcfg)
                           for c in self.clients]
-        # one jitted eval fn per distinct spec (not per call: re-jitting a
-        # fresh lambda every evaluate() recompiled every round)
+        # one jitted fn per distinct spec, NOT per call/round: re-jitting a
+        # fresh lambda each time recompiled every round, and the eager
+        # compute_uploads paid ~20 ms dispatch per client per round.
         self._eval_cache: Dict[client_lib.ClientSpec, Callable] = {}
+        self._upload_cache: Dict[client_lib.ClientSpec, Callable] = {}
         self.history: List[Dict] = []
 
     # ------------------------------------------------------------------
@@ -84,45 +98,53 @@ class CollabTrainer:
         ccfg = self.ccfg
         mode = ccfg.mode
         N = len(self.clients)
+        # Keys are drawn for ALL N clients regardless of participation, so
+        # present clients consume the same per-client keys under every
+        # schedule (and as in the vectorized engine); absent clients simply
+        # never use theirs.
         self.key, relay_ks, upd_ks, upl_ks = round_keys(self.key, N)
+        mask = np.asarray(self.schedule.mask(len(self.history), N), bool)
+        present = np.nonzero(mask)[0]
 
-        # phase 1 — downlink: every client sees last round's relay state
-        if mode in ("cors", "fd"):
-            teachers = [self.server.relay(i, max(1, ccfg.m_down), relay_ks[i])
-                        for i in range(N)]
-        else:
-            teachers = [client_lib.empty_teacher(ccfg)] * N
+        # phase 1 — downlink: every PRESENT client sees last round's state
+        teachers: Dict[int, Dict] = {}
+        for i in present:
+            teachers[i] = (self.server.relay(i, max(1, ccfg.m_down),
+                                             relay_ks[i])
+                           if mode in ("cors", "fd")
+                           else client_lib.empty_teacher(ccfg))
 
-        # phase 2 — local updates (Algorithm 2)
-        metrics_all = []
-        for i, c in enumerate(self.clients):
+        # phase 2 — local updates (Algorithm 2); absent clients are frozen
+        metrics_all = [jax.tree.map(float, client_lib.zero_metrics(ccfg))
+                       for _ in range(N)]
+        for i in present:
+            c = self.clients[i]
             c.params, c.opt_state, m = self._updaters[i](
                 c.params, c.opt_state, self._batches(c), teachers[i],
                 upd_ks[i])
-            metrics_all.append(jax.tree.map(float, m))
+            metrics_all[i] = jax.tree.map(float, m)
 
-        # phase 3 — uplink + server merge (Algorithm 1)
+        # phase 3 — uplink + server merge (Algorithm 1), present clients
+        # only; a zero-participant round leaves the relay state untouched
         if mode in ("cors", "fd"):
             self.server.begin_round()
-            for i, c in enumerate(self.clients):
-                payload = client_lib.compute_uploads(
-                    c.spec, c.params, c.data_x, c.data_y, ccfg, upl_ks[i])
+            for i in present:
+                c = self.clients[i]
+                payload = self._upload_fn(c.spec)(c.params, c.data_x,
+                                                  c.data_y, upl_ks[i])
                 self.server.upload(i, payload)
             self.server.end_round()
 
-        if mode == "fedavg":
-            avg = baselines.fedavg_aggregate([c.params for c in self.clients])
-            for c in self.clients:
-                c.params = avg
-            up, down = comm.fedavg_round_floats(
-                baselines.num_params(self.clients[0].params), N)
-        elif mode == "cors":
-            up, down = comm.cors_round_floats(
-                ccfg.num_classes, ccfg.d_feature, ccfg.m_up, ccfg.m_down, N)
-        elif mode == "fd":
-            up, down = comm.fd_round_floats(ccfg.num_classes, N)
-        else:
-            up = down = 0.0
+        if mode == "fedavg" and len(present):
+            avg = baselines.fedavg_aggregate(
+                [self.clients[i].params for i in present])
+            for i in present:
+                self.clients[i].params = avg
+        up, down = comm.round_floats(
+            mode, n_present=len(present), C=ccfg.num_classes,
+            d=ccfg.d_feature, m_up=ccfg.m_up, m_down=ccfg.m_down,
+            model_size=(baselines.num_params(self.clients[0].params)
+                        if mode == "fedavg" else 0))
         self.ledger.log_round(up, down)
 
         accs = [self.evaluate(c) for c in self.clients]
@@ -131,6 +153,7 @@ class CollabTrainer:
                "acc_std": float(np.std(accs)),
                "accs": accs,
                "metrics": metrics_all,
+               "participants": present.tolist(),
                "comm_up": up, "comm_down": down}
         self.history.append(rec)
         return rec
@@ -149,6 +172,13 @@ class CollabTrainer:
         if fn is None:
             fn = jax.jit(lambda p, x: spec.apply(p, x)[1])
             self._eval_cache[spec] = fn
+        return fn
+
+    def _upload_fn(self, spec: client_lib.ClientSpec):
+        fn = self._upload_cache.get(spec)
+        if fn is None:
+            fn = client_lib.make_compute_uploads(spec, self.ccfg)
+            self._upload_cache[spec] = fn
         return fn
 
     def evaluate(self, c: ClientState, batch: int = 512) -> float:

@@ -48,3 +48,18 @@ def fedavg_round_floats(model_size: int, n_clients: int):
 
 def sl_epoch_floats(n_samples: int, d: int, n_clients: int):
     return n_clients * n_samples * d, n_clients * n_samples * d
+
+
+def round_floats(mode: str, *, n_present: int, C: int = 0, d: int = 0,
+                 m_up: int = 0, m_down: int = 0, model_size: int = 0):
+    """Per-round (up, down) floats for any mode, billing only the
+    `n_present` clients that actually took part (partial participation:
+    absent clients exchange nothing). Shared by both engines so their
+    ledgers agree bit-for-bit."""
+    if mode == "fedavg":
+        return fedavg_round_floats(model_size, n_present)
+    if mode == "cors":
+        return cors_round_floats(C, d, m_up, m_down, n_present)
+    if mode == "fd":
+        return fd_round_floats(C, n_present)
+    return 0.0, 0.0

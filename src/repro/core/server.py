@@ -1,215 +1,28 @@
-"""GLOBALUPDATE (paper Algorithm 1) — the relay.
+"""GLOBALUPDATE (paper Algorithm 1) — the relay. MOVED: see `repro.relay`.
 
-The server's ONLY computation is averaging the clients' per-class averaged
-representations into global prototypes; observations live in a fixed-shape
-ring buffer and are relayed by uniform sampling. It never touches model
-weights (contrast FedAvg), which is what makes the scheme
-tunable/decentralizable — `sample_teacher` below is trivially replaceable by
-a peer-to-peer exchange, and the on-mesh distributed path (launch/train.py)
-replaces it with a single all-reduce.
+The relay grew from a single flat ring into a pluggable subsystem
+(`src/repro/relay/`, documented in relay/README.md):
 
-State layout: everything is a `RelayState` pytree of fixed-shape arrays
-(observations `(cap, C, d')` + per-slot validity/owner arrays + a write
-pointer), so upload, relay sampling and the round merge are pure jax
-functions — jit/vmap/shard_map-compatible and O(1) Python per call. The
-`RelayServer` class is a thin stateful wrapper over those functions used by
-the sequential `CollabTrainer`; the vectorized engine
-(core/vec_collab.py) calls the pure functions directly inside its jitted
-round step, so both paths evolve byte-identical relay state.
+  - `relay.flat`      — this module's former contents: the flat ring with
+                        uniform with-replacement sampling (bit-compatible).
+  - `relay.per_class` — the paper's exact layout: one ring per class with
+                        per-class-slot validity/owner/age.
+  - `relay.staleness` — age-tracked slots sampled ∝ exp(-λ·age) via a
+                        jittable Gumbel-top-k.
+  - `relay.participation` — per-round client participation schedules
+                        (full / uniform_k / cyclic / bernoulli_p).
+  - `relay.server`    — the stateful `RelayServer` wrapper, now
+                        policy-parameterized.
+
+This module remains as a re-export shim so existing imports
+(`from repro.core import server as server_lib`) keep working; new code
+should import from `repro.relay` directly.
 """
 from __future__ import annotations
 
-from typing import Dict, List, NamedTuple, Optional
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import prototypes
-from repro.types import CollabConfig
-
-# Ring-slot owner sentinels. Real clients are >= 0.
-SEED_OWNER = -1      # server-seeded random observation (paper Alg. 1 init)
-EMPTY_OWNER = -2     # slot never written
-
-
-class RelayState(NamedTuple):
-    """Everything the relay holds, as fixed-shape arrays (a jax pytree).
-
-    obs   (cap, C, d') f32 : observation ring buffer
-    valid (cap, C)    bool : per-slot per-class validity
-    owner (cap,)      int32: uploading client id (or SEED/EMPTY sentinel)
-    ptr   ()          int32: next ring write position
-    global_protos (C, d') f32, valid_g (C,) bool: the t̄^c prototypes
-    mean_logits (C, C) f32 : FD-mode per-class mean logits (zeros otherwise)
-    """
-    obs: jax.Array
-    valid: jax.Array
-    owner: jax.Array
-    ptr: jax.Array
-    global_protos: jax.Array
-    valid_g: jax.Array
-    mean_logits: jax.Array
-
-    @property
-    def capacity(self) -> int:
-        return self.obs.shape[0]
-
-
-def default_capacity(ccfg: CollabConfig, n_clients: int = 2) -> int:
-    """Mirror the old list-server bound: 32 · N · M_↑ live observations."""
-    return 32 * max(1, n_clients) * max(1, ccfg.m_up)
-
-
-def init_relay_state(ccfg: CollabConfig, d_feature: int, seed: int = 0,
-                     capacity: Optional[int] = None,
-                     n_clients: int = 2) -> RelayState:
-    """Paper Algorithm 1: S initializes randomly {t̄^c} and the observation
-    buffers. The random initial prototypes are load-bearing: they are a
-    COMMON anchor that aligns the clients' (independently initialized)
-    feature spaces in round 1, so that inter-client averaging of per-class
-    means is meaningful from round 2 on. Without it, averaging across
-    unaligned feature spaces cancels class structure and L_KD collapses the
-    model (verified empirically; see tests)."""
-    C = ccfg.num_classes
-    cap = default_capacity(ccfg, n_clients) if capacity is None else capacity
-    assert cap > 0, "relay buffer capacity must be positive"
-    n_seed = min(cap, max(1, ccfg.m_down))
-    rng = np.random.default_rng(seed)
-    protos = rng.normal(size=(C, d_feature)).astype(np.float32) * 0.01
-    obs = np.zeros((cap, C, d_feature), np.float32)
-    obs[:n_seed] = rng.normal(size=(n_seed, C, d_feature)).astype(np.float32) * 0.01
-    valid = np.zeros((cap, C), bool)
-    valid[:n_seed] = True
-    owner = np.full((cap,), EMPTY_OWNER, np.int32)
-    owner[:n_seed] = SEED_OWNER
-    return RelayState(obs=jnp.asarray(obs), valid=jnp.asarray(valid),
-                      owner=jnp.asarray(owner),
-                      ptr=jnp.asarray(n_seed % cap, jnp.int32),
-                      global_protos=jnp.asarray(protos),
-                      valid_g=jnp.ones((C,), bool),
-                      mean_logits=jnp.zeros((C, C), jnp.float32))
-
-
-# -- uplink (pure) ---------------------------------------------------------
-def buffer_append(state: RelayState, obs_rows, valid_rows,
-                  owner_rows) -> RelayState:
-    """Write k observation rows into the ring (oldest-first overwrite).
-
-    obs_rows (k, C, d'), valid_rows (k, C), owner_rows (k,) int32.
-    k must not exceed capacity (scatter order for duplicate ring indices is
-    undefined); callers size the buffer with `default_capacity`.
-    """
-    k = obs_rows.shape[0]
-    cap = state.obs.shape[0]
-    idx = (state.ptr + jnp.arange(k, dtype=jnp.int32)) % cap
-    return state._replace(
-        obs=state.obs.at[idx].set(obs_rows.astype(jnp.float32)),
-        valid=state.valid.at[idx].set(valid_rows),
-        owner=state.owner.at[idx].set(owner_rows.astype(jnp.int32)),
-        ptr=(state.ptr + k) % cap)
-
-
-def merge_round(state: RelayState, proto: prototypes.ProtoState,
-                logit: Optional[prototypes.ProtoState] = None) -> RelayState:
-    """Inter-client aggregation (the server's only computation, Alg. 1):
-    per-round recompute of t̄^c from the merged per-class sums."""
-    state = state._replace(global_protos=prototypes.means(proto),
-                           valid_g=proto.count > 0)
-    if logit is not None:
-        state = state._replace(mean_logits=prototypes.means(logit))
-    return state
-
-
-# -- downlink (pure) -------------------------------------------------------
-def sample_teacher(state: RelayState, client_id, m_down: int, key) -> Dict:
-    """Observations of OTHER users, chosen at random (paper §4: 'downloads
-    the representations of another user chosen at random').
-
-    Pure and jit/vmap-compatible: uniform with-replacement sampling over the
-    ring slots not owned by `client_id`; falls back to the whole filled
-    buffer when every slot is the client's own, and to a zero/invalid
-    teacher when the buffer is entirely empty. Always returns the full
-    teacher dict (all keys, fixed shapes)."""
-    usable = state.owner != EMPTY_OWNER
-    others = usable & (state.owner != jnp.asarray(client_id, jnp.int32))
-    pool = jnp.where(jnp.any(others), others, usable)
-    any_pool = jnp.any(pool)
-    logits = jnp.where(pool, 0.0, -jnp.inf)
-    k_sample, k_pick = jax.random.split(jnp.asarray(key))
-    idx = jax.random.categorical(k_sample, logits, shape=(m_down,))
-    idx = jnp.where(any_pool, idx, 0)
-    obs = jnp.where(any_pool, state.obs[idx], 0.0)            # (M, C, d')
-    valid_o = jnp.where(any_pool, jnp.all(state.valid[idx], axis=0), False)
-    return {"global_protos": state.global_protos,
-            "valid_g": state.valid_g,
-            "obs": obs, "valid_o": valid_o,
-            "obs_pick": jax.random.randint(k_pick, (), 0, m_down,
-                                           dtype=jnp.int32),
-            "mean_logits": state.mean_logits}
-
-
-_sample_teacher_jit = jax.jit(sample_teacher, static_argnums=(2,))
-
-
-# -- stateful wrapper (sequential CollabTrainer path) ----------------------
-class RelayServer:
-    def __init__(self, ccfg: CollabConfig, d_feature: int, seed: int = 0,
-                 capacity: Optional[int] = None, n_clients: int = 2):
-        self.ccfg = ccfg
-        self.d = d_feature
-        self.state = init_relay_state(ccfg, d_feature, seed, capacity,
-                                      n_clients)
-        self.round_states: List[prototypes.ProtoState] = []
-        self.round_logit_states: List[prototypes.ProtoState] = []
-
-    # -- uplink ------------------------------------------------------------
-    def begin_round(self):
-        self.round_states = []
-        self.round_logit_states = []
-
-    def upload(self, client_id: int, payload: Dict):
-        self.round_states.append(payload["proto"])
-        if "logit_proto" in payload:
-            self.round_logit_states.append(payload["logit_proto"])
-        obs = payload["obs"]                                  # (M_up, C, d')
-        m = obs.shape[0]
-        self.state = buffer_append(
-            self.state, obs,
-            jnp.broadcast_to(payload["valid"], (m,) + payload["valid"].shape),
-            jnp.full((m,), client_id, jnp.int32))
-
-    def end_round(self):
-        if self.round_states:
-            merged = prototypes.merge(*self.round_states)
-            logit = (prototypes.merge(*self.round_logit_states)
-                     if self.round_logit_states else None)
-            self.state = merge_round(self.state, merged, logit)
-
-    # -- downlink ----------------------------------------------------------
-    def relay(self, client_id: int, m_down: int, key) -> Dict:
-        return _sample_teacher_jit(self.state,
-                                   jnp.asarray(client_id, jnp.int32),
-                                   m_down, key)
-
-    # -- introspection (tests / notebooks) ---------------------------------
-    @property
-    def global_protos(self) -> jax.Array:
-        return self.state.global_protos
-
-    @property
-    def valid_g(self) -> jax.Array:
-        return self.state.valid_g
-
-    @property
-    def mean_logits(self) -> jax.Array:
-        return self.state.mean_logits
-
-    @property
-    def obs_buffer(self) -> List[Dict]:
-        """Filled ring slots as a list of entry dicts (compat view; every
-        entry carries an "owner" key, including seeded/fallback entries)."""
-        owner = np.asarray(self.state.owner)
-        return [{"obs": self.state.obs[i], "valid": self.state.valid[i],
-                 "owner": int(owner[i])}
-                for i in np.where(owner != EMPTY_OWNER)[0]]
+from repro.relay.base import (EMPTY_OWNER, SEED_OWNER,  # noqa: F401
+                              default_capacity)
+from repro.relay.flat import (FlatRelay, RelayState,  # noqa: F401
+                              buffer_append, init_relay_state, merge_round,
+                              sample_teacher)
+from repro.relay.server import RelayServer  # noqa: F401

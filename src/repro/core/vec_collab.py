@@ -6,11 +6,28 @@ loop (cost linear in N, one dispatch per client per phase). This engine
 stacks homogeneous clients' params / Adam moments / data along a leading
 client axis and runs the whole round — relay sampling, local updates,
 uploads, server merge — as a single `jax.vmap`'d jitted function over that
-axis, against the same fixed-shape `server.RelayState` ring buffer the
-sequential path uses. Given the same seeds and equal-size partitions the two
-engines evolve identical relay state and near-identical weights (see
-tests/test_vec_collab.py), but the vectorized round is one XLA program
-instead of O(N) Python dispatches.
+axis, against the same fixed-shape relay state the sequential path uses.
+Given the same seeds and equal-size partitions the two engines evolve
+identical relay state and near-identical weights (see
+tests/test_vec_collab.py and tests/test_relay_policies.py), but the
+vectorized round is one XLA program instead of O(N) Python dispatches.
+
+Relay policy: the server side is pluggable (`repro.relay`): `flat` (the
+seed ring, bit-compatible), `per_class` (the paper's exact per-class buffer
+layout) or `staleness` (exp(-λ·age) Gumbel-top-k sampling). The policy's
+pure functions are closed over by the jitted round step, so swapping
+policies swaps ONE compiled program, not the engine.
+
+Participation: a `ParticipationSchedule` (repro.relay.participation) emits
+a per-round boolean client mask. Schedules with a static participant count
+k (uniform_k, cyclic) run COMPACTED: the step gathers the k participants
+into a (k, ...) block, so a k=N/4 round costs ~1/4 of a full round —
+real savings, not just masking. Variable-count schedules (bernoulli_p) and
+the mesh path run full-width and mask: absent clients' params/opt are
+frozen via `where`, their uploads zero-weighted, and the ring append drops
+their rows without consuming slots. Either way there is exactly one jitted
+round step per (policy, schedule) — the mask and gather indices are traced
+arguments of fixed shape, so participation never retraces.
 
 Device scaling: pass `mesh` (a 1-D mesh with a "clients" axis, see
 `sharding.client_mesh`) and the round step is wrapped in `shard_map` — each
@@ -29,10 +46,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import sharding
+from repro import relay as relay_lib, sharding
 from repro.core import baselines, client as client_lib, collab, comm, \
-    prototypes, server as server_lib
+    prototypes
 from repro.optim import adam_init
+from repro.relay.participation import bcast_mask as _bcast, freeze_absent
 from repro.types import CollabConfig, TrainConfig
 
 
@@ -56,7 +74,7 @@ class VectorizedCollabTrainer:
                  client_data: Sequence[Tuple[jax.Array, jax.Array]],
                  test_data: Tuple[jax.Array, jax.Array],
                  ccfg: CollabConfig, tcfg: TrainConfig, seed: int = 0,
-                 mesh=None):
+                 mesh=None, policy=None, schedule=None):
         if isinstance(specs, client_lib.ClientSpec):
             specs = [specs] * len(params_list)
         assert all(s is specs[0] for s in specs), (
@@ -68,6 +86,8 @@ class VectorizedCollabTrainer:
         self.ccfg, self.tcfg = ccfg, tcfg
         self.n_clients = N = len(params_list)
         self.mesh = mesh
+        self.policy = relay_lib.get_policy(policy)
+        self.schedule = relay_lib.get_schedule(schedule, seed=seed)
         if mesh is not None:
             assert N % mesh.shape["clients"] == 0, (N, dict(mesh.shape))
 
@@ -85,7 +105,7 @@ class VectorizedCollabTrainer:
 
         self.params = _stack(params_list)
         self.opt_state = _stack([adam_init(p) for p in params_list])
-        self.relay_state = server_lib.init_relay_state(
+        self.relay_state = self.policy.init_state(
             ccfg, ccfg.d_feature, seed, n_clients=N)
         self.test_x, self.test_y = (jnp.asarray(test_data[0]),
                                     jnp.asarray(test_data[1]))
@@ -93,6 +113,12 @@ class VectorizedCollabTrainer:
         self.key = jax.random.PRNGKey(seed)
         self.history: List[Dict] = []
 
+        # Compaction: only off-mesh (gathering an arbitrary client subset
+        # across a sharded axis would defeat shard_map's static layout) and
+        # only when the schedule's per-round count is static.
+        fixed_k = self.schedule.fixed_k
+        self._k_active = (fixed_k if (mesh is None and fixed_k is not None)
+                          else N)
         self._round_step = self._make_round_step()
         spec = self.spec
         self._eval_batched = jax.jit(
@@ -106,70 +132,121 @@ class VectorizedCollabTrainer:
     # ------------------------------------------------------------------
     def _make_round_step(self):
         spec, ccfg, tcfg = self.spec, self.ccfg, self.tcfg
-        N, mesh = self.n_clients, self.mesh
+        N, mesh, policy = self.n_clients, self.mesh, self.policy
         mode = ccfg.mode
         m_down = max(1, ccfg.m_down)
         local_update = client_lib.make_local_update_fn(spec, ccfg, tcfg)
+        # Gather/scatter the participant block ONLY when it is a strict
+        # subset: with k == N the idx is a runtime arange XLA cannot elide,
+        # and the full-size gather + scatter-back of params/opt/batches
+        # would tax every full-participation round for nothing.
+        compact = mesh is None and self._k_active < N
 
         def round_core(params, opt, rstate, batches, data_x, data_y, ids,
-                       relay_ks, upd_ks, upl_ks):
-            # phase 1 — downlink (vmapped relay sampling from the ring)
+                       relay_ks, upd_ks, upl_ks, mask, idx):
+            # phase 0 — participant gather. Off-mesh the round runs on the
+            # idx-selected (k, ...) block (identity permutation under full
+            # participation); on-mesh each device keeps its full local
+            # shard and `sub_mask` does the masking.
+            if compact:
+                take = lambda t: jax.tree.map(lambda a: a[idx], t)
+                p_s, o_s, b_s = take(params), take(opt), take(batches)
+                dx, dy, ids_s = data_x[idx], data_y[idx], ids[idx]
+                rk, uk, ok = relay_ks[idx], upd_ks[idx], upl_ks[idx]
+                sub_mask = mask[idx]
+            else:
+                p_s, o_s, b_s = params, opt, batches
+                dx, dy, ids_s = data_x, data_y, ids
+                rk, uk, ok = relay_ks, upd_ks, upl_ks
+                sub_mask = mask
+            k_loc = ids_s.shape[0]
+            wf = sub_mask.astype(jnp.float32)
+            n_present = jnp.sum(wf)
+            if mesh is not None:
+                n_present = jax.lax.psum(n_present, "clients")
+            any_present = n_present > 0
+
+            keep = lambda new, old: freeze_absent(sub_mask, new, old)
+
+            # phase 1 — downlink (vmapped relay sampling from the buffers)
             if mode in ("cors", "fd"):
                 teacher = jax.vmap(
-                    lambda i, k: server_lib.sample_teacher(
-                        rstate, i, m_down, k))(ids, relay_ks)
+                    lambda i, k: policy.sample_teacher(
+                        rstate, i, m_down, k))(ids_s, rk)
             else:
                 et = client_lib.empty_teacher(ccfg)
-                nloc = ids.shape[0]
                 teacher = jax.tree.map(
-                    lambda a: jnp.broadcast_to(a, (nloc,) + a.shape), et)
+                    lambda a: jnp.broadcast_to(a, (k_loc,) + a.shape), et)
 
-            # phase 2 — all local updates in one vmap (Algorithm 2 × N)
-            params, opt, metrics = jax.vmap(local_update)(
-                params, opt, batches, teacher, upd_ks)
+            # phase 2 — all local updates in one vmap (Algorithm 2 × k)
+            new_p, new_o, metrics = jax.vmap(local_update)(
+                p_s, o_s, b_s, teacher, uk)
+            p_s, o_s = keep(new_p, p_s), keep(new_o, o_s)
+            metrics = jax.tree.map(
+                lambda m: jnp.where(_bcast(sub_mask, m), m, 0.0), metrics)
 
-            # phase 3 — uplink + merge (Algorithm 1)
+            # phase 3 — uplink + merge (Algorithm 1): absent clients'
+            # prototype sums are zero-weighted and their observation rows
+            # dropped from the ring WITHOUT consuming slots; a round with
+            # zero participants leaves the relay state untouched.
             if mode in ("cors", "fd"):
                 uploads = jax.vmap(
                     lambda p, x, y, k: client_lib.compute_uploads(
-                        spec, p, x, y, ccfg, k))(params, data_x, data_y,
-                                                 upl_ks)
+                        spec, p, x, y, ccfg, k))(p_s, dx, dy, ok)
                 proto = prototypes.ProtoState(
-                    jnp.sum(uploads["proto"].sum, axis=0),
-                    jnp.sum(uploads["proto"].count, axis=0))
+                    jnp.sum(uploads["proto"].sum * wf[:, None, None], axis=0),
+                    jnp.sum(uploads["proto"].count * wf[:, None], axis=0))
                 logit = None
                 if mode == "fd":
                     logit = prototypes.ProtoState(
-                        jnp.sum(uploads["logit_proto"].sum, axis=0),
-                        jnp.sum(uploads["logit_proto"].count, axis=0))
+                        jnp.sum(uploads["logit_proto"].sum
+                                * wf[:, None, None], axis=0),
+                        jnp.sum(uploads["logit_proto"].count
+                                * wf[:, None], axis=0))
                 m_real = uploads["obs"].shape[1]     # 0 when m_up == 0
                 obs_rows = uploads["obs"].reshape(-1, *uploads["obs"].shape[2:])
                 valid_rows = jnp.repeat(uploads["valid"], m_real, axis=0)
-                owner_rows = jnp.repeat(ids, m_real)
+                owner_rows = jnp.repeat(ids_s, m_real)
+                row_mask = jnp.repeat(sub_mask, m_real)
                 if mesh is not None:
                     # merge is the paper's only collective: an all-reduce of
                     # (C, d'+1) floats over the client axis
                     proto = prototypes.psum_merge(proto, "clients")
                     if logit is not None:
                         logit = prototypes.psum_merge(logit, "clients")
-                    obs_rows = jax.lax.all_gather(
-                        obs_rows, "clients", axis=0, tiled=True)
-                    valid_rows = jax.lax.all_gather(
-                        valid_rows, "clients", axis=0, tiled=True)
-                    owner_rows = jax.lax.all_gather(
-                        owner_rows, "clients", axis=0, tiled=True)
-                rstate = server_lib.merge_round(rstate, proto, logit)
-                rstate = server_lib.buffer_append(rstate, obs_rows,
-                                                  valid_rows, owner_rows)
+                    obs_rows, valid_rows, owner_rows, row_mask = (
+                        jax.lax.all_gather(a, "clients", axis=0, tiled=True)
+                        for a in (obs_rows, valid_rows, owner_rows, row_mask))
+                new_rstate = policy.append(rstate, obs_rows, valid_rows,
+                                           owner_rows, row_mask)
+                new_rstate = policy.merge_round(new_rstate, proto, logit)
+                rstate = jax.tree.map(
+                    lambda n, o: jnp.where(any_present, n, o),
+                    new_rstate, rstate)
 
             if mode == "fedavg":
+                denom = jnp.maximum(n_present, 1.0)
+
                 def avg(p):
-                    s = jnp.sum(p.astype(jnp.float32), axis=0)
+                    s = jnp.sum(p.astype(jnp.float32) * _bcast(wf, p), axis=0)
                     if mesh is not None:
                         s = jax.lax.psum(s, "clients")
-                    return jnp.broadcast_to((s / N).astype(p.dtype), p.shape)
-                params = jax.tree.map(avg, params)
-            return params, opt, rstate, metrics
+                    a = (s / denom).astype(p.dtype)
+                    return jnp.where(_bcast(sub_mask, p),
+                                     jnp.broadcast_to(a, p.shape), p)
+                p_s = jax.tree.map(avg, p_s)
+
+            # phase 4 — scatter the compacted block back into the stack
+            if compact:
+                put = lambda full, s: jax.tree.map(
+                    lambda f, v: f.at[idx].set(v), full, s)
+                params, opt = put(params, p_s), put(opt, o_s)
+                metrics_full = jax.tree.map(
+                    lambda m: jnp.zeros((N,) + m.shape[1:],
+                                        m.dtype).at[idx].set(m), metrics)
+            else:
+                params, opt, metrics_full = p_s, o_s, metrics
+            return params, opt, rstate, metrics_full
 
         if mesh is None:
             return jax.jit(round_core)
@@ -178,7 +255,7 @@ class VectorizedCollabTrainer:
         cl, rep = P("clients"), P()
         mapped = sharding.shard_map(
             round_core, mesh=mesh,
-            in_specs=(cl, cl, rep, cl, cl, cl, cl, cl, cl, cl),
+            in_specs=(cl, cl, rep, cl, cl, cl, cl, cl, cl, cl, cl, cl),
             out_specs=(cl, cl, rep, cl), check_rep=False)
         return jax.jit(mapped)
 
@@ -186,23 +263,33 @@ class VectorizedCollabTrainer:
     def run_round(self) -> Dict:
         ccfg, N = self.ccfg, self.n_clients
         mode = ccfg.mode
+        # Same key schedule as the sequential oracle: keys for ALL N
+        # clients regardless of participation (absent clients just never
+        # consume theirs), so seq and vec stay equivalence-testable under
+        # every schedule.
         self.key, relay_ks, upd_ks, upl_ks = collab.round_keys(self.key, N)
         ids = jnp.arange(N, dtype=jnp.int32)
+        mask_np = np.asarray(self.schedule.mask(len(self.history), N), bool)
+        present = np.nonzero(mask_np)[0]
+        if self.mesh is None and self._k_active < N:
+            idx_np = present                     # static-k compaction
+            assert idx_np.size == self._k_active, (
+                "schedule emitted a mask inconsistent with its fixed_k",
+                idx_np.size, self._k_active)
+        else:
+            idx_np = np.arange(N)
+        mask = jnp.asarray(mask_np)
+        idx = jnp.asarray(idx_np, jnp.int32)
         self.params, self.opt_state, self.relay_state, metrics = \
             self._round_step(self.params, self.opt_state, self.relay_state,
                              self.batches, self.data_x, self.data_y, ids,
-                             relay_ks, upd_ks, upl_ks)
+                             relay_ks, upd_ks, upl_ks, mask, idx)
 
-        if mode == "fedavg":
-            up, down = comm.fedavg_round_floats(
-                baselines.num_params(self.client_params(0)), N)
-        elif mode == "cors":
-            up, down = comm.cors_round_floats(
-                ccfg.num_classes, ccfg.d_feature, ccfg.m_up, ccfg.m_down, N)
-        elif mode == "fd":
-            up, down = comm.fd_round_floats(ccfg.num_classes, N)
-        else:
-            up = down = 0.0
+        up, down = comm.round_floats(
+            mode, n_present=int(present.size), C=ccfg.num_classes,
+            d=ccfg.d_feature, m_up=ccfg.m_up, m_down=ccfg.m_down,
+            model_size=(baselines.num_params(self.client_params(0))
+                        if mode == "fedavg" else 0))
         self.ledger.log_round(up, down)
 
         accs = self.evaluate_all()
@@ -214,6 +301,7 @@ class VectorizedCollabTrainer:
                "acc_std": float(np.std(accs)),
                "accs": accs,
                "metrics": metrics_all,
+               "participants": present.tolist(),
                "comm_up": up, "comm_down": down}
         self.history.append(rec)
         return rec

@@ -25,6 +25,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import sharding
 from repro.core import losses, prototypes
+from repro.relay.participation import bcast_mask, freeze_absent
 from repro.models import encdec, lm
 from repro.optim import adam_init, adam_update
 from repro.types import CollabConfig, ModelConfig, ShapeConfig
@@ -116,19 +117,41 @@ def make_train_step(cfg: ModelConfig, ccfg: CollabConfig, *,
             feats.reshape(-1, feats.shape[-1]), labels.reshape(-1))
         return params, opt, stats, metrics
 
-    def train_step(state: TrainState, batch, key):
+    def train_step(state: TrainState, batch, key, participation=None):
+        """`participation`: optional (n_clients,) bool mask (see
+        repro.relay.participation) — absent clients' params/opt freeze for
+        the step, their per-class stats are zero-weighted in the merge, and
+        the FedAvg baseline averages over present clients only. None (the
+        default) is full participation and traces the identical program as
+        before the mask existed."""
         proto_means = prototypes.means(state.proto)
         keys = jax.random.split(key, n_clients)
         params, opt, stats, metrics = jax.vmap(
             client_step, in_axes=(0, 0, 0, None, 0))(
                 state.params, state.opt, batch, proto_means, keys)
+        if participation is not None:
+            wf = participation.astype(jnp.float32)
+            params = freeze_absent(participation, params, state.params)
+            opt = freeze_absent(participation, opt, state.opt)
+            stats = prototypes.ProtoState(stats.sum * wf[:, None, None],
+                                          stats.count * wf[:, None])
         if ccfg.mode == "fedavg":
             # baseline: per-step O(D) weight averaging across clients
-            params = jax.tree.map(
-                lambda p: jnp.broadcast_to(jnp.mean(p, axis=0,
-                                                    dtype=jnp.float32)
-                                           .astype(p.dtype), p.shape),
-                params)
+            if participation is None:
+                params = jax.tree.map(
+                    lambda p: jnp.broadcast_to(jnp.mean(p, axis=0,
+                                                        dtype=jnp.float32)
+                                               .astype(p.dtype), p.shape),
+                    params)
+            else:
+                n_eff = jnp.maximum(jnp.sum(wf), 1.0)
+
+                def avg(p):
+                    s = jnp.sum(p.astype(jnp.float32) * bcast_mask(wf, p),
+                                axis=0) / n_eff
+                    return jnp.broadcast_to(s.astype(p.dtype), p.shape)
+                params = freeze_absent(participation,
+                                       jax.tree.map(avg, params), params)
         if ccfg.mode in ("cors", "fd") and sync_in_step:
             # the paper's exchange: inter-client merge of per-class stats
             merged = prototypes.ProtoState(
@@ -139,7 +162,14 @@ def make_train_step(cfg: ModelConfig, ccfg: CollabConfig, *,
                 decay * state.proto.count + merged.count)
         else:
             proto = state.proto
-        metrics = jax.tree.map(lambda m: jnp.mean(m), metrics)
+        if participation is None:
+            metrics = jax.tree.map(lambda m: jnp.mean(m), metrics)
+        else:
+            # mean over PRESENT clients only — absent clients' updates were
+            # discarded above, so their losses must not pollute the record
+            metrics = jax.tree.map(
+                lambda m: jnp.sum(m * wf) / jnp.maximum(jnp.sum(wf), 1.0),
+                metrics)
         return TrainState(params, opt, proto, state.step + 1), metrics
 
     return train_step

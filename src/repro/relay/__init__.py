@@ -1,0 +1,43 @@
+"""Relay-policy + participation subsystem (see relay/README.md).
+
+Public surface:
+  - policies: FlatRelay | PerClassRelay | StalenessRelay, via `get_policy`
+  - schedules: FullParticipation | UniformK | Cyclic | BernoulliP, via
+    `get_schedule`
+  - `RelayServer`: stateful wrapper for the sequential trainer
+  - base contract + sentinels in `relay.base`
+"""
+from __future__ import annotations
+
+from typing import Union
+
+from repro.relay.base import (EMPTY_OWNER, SEED_OWNER, TEACHER_KEYS,
+                              RelayPolicy, default_capacity)  # noqa: F401
+from repro.relay.flat import FlatRelay, RelayState  # noqa: F401
+from repro.relay.participation import (BernoulliP, Cyclic,  # noqa: F401
+                                       FullParticipation,
+                                       ParticipationSchedule, UniformK,
+                                       get_schedule)
+from repro.relay.per_class import PerClassRelay, PerClassRelayState  # noqa: F401
+from repro.relay.server import RelayServer  # noqa: F401
+from repro.relay.staleness import (StalenessRelay,  # noqa: F401
+                                   StalenessRelayState, staleness_weights)
+
+POLICIES = {"flat": FlatRelay, "per_class": PerClassRelay,
+            "staleness": StalenessRelay}
+
+
+def get_policy(spec: Union[str, RelayPolicy, None], **kwargs) -> RelayPolicy:
+    """Resolve a policy name ("flat" | "per_class" | "staleness", optionally
+    "staleness:<lam>") or instance; None means the flat (seed) policy."""
+    if spec is None:
+        return FlatRelay()
+    if isinstance(spec, RelayPolicy):
+        return spec
+    name, _, arg = str(spec).partition(":")
+    if name not in POLICIES:
+        raise ValueError(f"unknown relay policy: {spec!r} "
+                         f"(have {sorted(POLICIES)})")
+    if name == "staleness" and arg:
+        kwargs.setdefault("lam", float(arg))
+    return POLICIES[name](**kwargs)

@@ -1,0 +1,110 @@
+"""RelayPolicy — the pluggable server-side sampling/retention API.
+
+The paper's server is a *relay*: it never touches model weights, so the only
+server-side design freedom is (a) how observations are retained and (b) how a
+teacher is sampled for a downloading client. A `RelayPolicy` packages exactly
+those two choices behind four functions; everything else (local updates,
+uploads, accounting) is policy-agnostic and lives in the engines.
+
+Contract — every method except `init_state` must be a pure jax function of
+fixed-shape arrays (jit/vmap/shard_map-compatible, no data-dependent Python):
+
+  init_state(ccfg, d_feature, seed, capacity, n_clients) -> state pytree
+      Host-side (numpy ok). Seeds the buffers and random prototypes
+      (Algorithm 1 init — the common anchor that aligns feature spaces).
+  append(state, obs_rows, valid_rows, owner_rows, row_mask=None) -> state
+      Write k uploaded observation rows. `row_mask` (k,) bool, when given,
+      drops masked rows WITHOUT consuming ring slots (partial participation:
+      absent clients' fixed-shape rows must not advance the write pointer).
+  sample_teacher(state, client_id, m_down, key) -> teacher dict
+      The downlink. Must return the full fixed-shape teacher dict (keys
+      `TEACHER_KEYS`) regardless of buffer fill state.
+  merge_round(state, proto, logit=None) -> state
+      End-of-round aggregation of the clients' per-class sums into global
+      prototypes (the server's only computation), plus any per-round state
+      bookkeeping (e.g. staleness age increments).
+
+Ordering: engines call `append` (phase 3 uploads, client-id order) and THEN
+`merge_round`, exactly once per round. Policies may rely on that order (the
+staleness policy does: fresh slots are written at age 0, then aged by the
+merge, so a slot uploaded r rounds ago has age r).
+
+Policies are small frozen dataclasses so they can be closed over by jitted
+round steps and used as dict keys. States are NamedTuple pytrees. Every state
+carries the shared prototype fields (`global_protos`, `valid_g`,
+`mean_logits`); `merge_protos` below implements that common part.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+
+from repro.core import prototypes
+from repro.types import CollabConfig
+
+# Ring-slot owner sentinels. Real clients are >= 0.
+SEED_OWNER = -1      # server-seeded random observation (paper Alg. 1 init)
+EMPTY_OWNER = -2     # slot never written
+
+# Fixed teacher-dict schema (what client_lib.loss_fn consumes); every policy
+# returns exactly these keys with the same shapes/dtypes.
+TEACHER_KEYS = ("global_protos", "valid_g", "obs", "valid_o", "obs_pick",
+                "mean_logits")
+
+
+def default_capacity(ccfg: CollabConfig, n_clients: int = 2) -> int:
+    """Mirror the old list-server bound: 32 · N · M_↑ live observations."""
+    return 32 * max(1, n_clients) * max(1, ccfg.m_up)
+
+
+def merge_protos(state, proto: prototypes.ProtoState,
+                 logit: Optional[prototypes.ProtoState] = None):
+    """Shared part of `merge_round`: per-round recompute of t̄^c (Alg. 1)."""
+    state = state._replace(global_protos=prototypes.means(proto),
+                           valid_g=proto.count > 0)
+    if logit is not None:
+        state = state._replace(mean_logits=prototypes.means(logit))
+    return state
+
+
+class RelayPolicy:
+    """Abstract base; see module docstring for the contract."""
+    name: str = "abstract"
+
+    def init_state(self, ccfg: CollabConfig, d_feature: int, seed: int = 0,
+                   capacity: Optional[int] = None, n_clients: int = 2):
+        raise NotImplementedError
+
+    def append(self, state, obs_rows, valid_rows, owner_rows, row_mask=None):
+        raise NotImplementedError
+
+    def sample_teacher(self, state, client_id, m_down: int, key) -> Dict:
+        raise NotImplementedError
+
+    def merge_round(self, state, proto, logit=None):
+        raise NotImplementedError
+
+    # -- introspection (tests / notebooks; host-side, not traced) ----------
+    def debug_entries(self, state):
+        """Filled slots as a list of {"obs", "valid", "owner"} dicts."""
+        raise NotImplementedError
+
+
+def ring_indices(ptr, k: int, cap: int, row_mask=None):
+    """Ring write positions for k rows, of which only `row_mask` are real
+    (None = all). The single source of truth for flat-ring append math —
+    every flat-layout policy (flat, staleness) derives its writes from it.
+
+    Masked-out rows get index `cap` (out of bounds — scatter with
+    mode="drop" discards them) and do NOT consume a slot, so the ring
+    evolves exactly as if only the masked-in rows had been appended, in
+    order. Returns (idx (k,) int32, new_ptr () int32).
+    """
+    if row_mask is None:
+        idx = (ptr + jnp.arange(k, dtype=jnp.int32)) % cap
+        return idx, ((ptr + k) % cap)
+    w = row_mask.astype(jnp.int32)
+    offs = jnp.cumsum(w) - 1                       # slot offset per real row
+    idx = jnp.where(row_mask, (ptr + offs) % cap, cap).astype(jnp.int32)
+    return idx, ((ptr + jnp.sum(w)) % cap).astype(jnp.int32)

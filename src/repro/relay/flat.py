@@ -1,0 +1,159 @@
+"""Flat ring relay — one global ring, uniform with-replacement sampling.
+
+This is the seed implementation moved verbatim from `core/server.py` (which
+now re-exports it): a single (cap, C, d') observation ring with per-slot
+validity/owner and uniform sampling over other clients' slots. It is the
+bit-compatibility anchor — `FlatRelay` must evolve byte-identical state to
+the pre-subsystem `RelayState`, and the seq/vec equivalence tests in
+tests/test_vec_collab.py pin that.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import prototypes
+from repro.relay import base
+from repro.relay.base import EMPTY_OWNER, SEED_OWNER, default_capacity
+from repro.types import CollabConfig
+
+
+class RelayState(NamedTuple):
+    """Everything the flat relay holds, as fixed-shape arrays (a jax pytree).
+
+    obs   (cap, C, d') f32 : observation ring buffer
+    valid (cap, C)    bool : per-slot per-class validity
+    owner (cap,)      int32: uploading client id (or SEED/EMPTY sentinel)
+    ptr   ()          int32: next ring write position
+    global_protos (C, d') f32, valid_g (C,) bool: the t̄^c prototypes
+    mean_logits (C, C) f32 : FD-mode per-class mean logits (zeros otherwise)
+    """
+    obs: jax.Array
+    valid: jax.Array
+    owner: jax.Array
+    ptr: jax.Array
+    global_protos: jax.Array
+    valid_g: jax.Array
+    mean_logits: jax.Array
+
+    @property
+    def capacity(self) -> int:
+        return self.obs.shape[0]
+
+
+def init_relay_state(ccfg: CollabConfig, d_feature: int, seed: int = 0,
+                     capacity: Optional[int] = None,
+                     n_clients: int = 2) -> RelayState:
+    """Paper Algorithm 1: S initializes randomly {t̄^c} and the observation
+    buffers. The random initial prototypes are load-bearing: they are a
+    COMMON anchor that aligns the clients' (independently initialized)
+    feature spaces in round 1, so that inter-client averaging of per-class
+    means is meaningful from round 2 on. Without it, averaging across
+    unaligned feature spaces cancels class structure and L_KD collapses the
+    model (verified empirically; see tests)."""
+    C = ccfg.num_classes
+    cap = default_capacity(ccfg, n_clients) if capacity is None else capacity
+    assert cap > 0, "relay buffer capacity must be positive"
+    n_seed = min(cap, max(1, ccfg.m_down))
+    rng = np.random.default_rng(seed)
+    protos = rng.normal(size=(C, d_feature)).astype(np.float32) * 0.01
+    obs = np.zeros((cap, C, d_feature), np.float32)
+    obs[:n_seed] = rng.normal(size=(n_seed, C, d_feature)).astype(np.float32) * 0.01
+    valid = np.zeros((cap, C), bool)
+    valid[:n_seed] = True
+    owner = np.full((cap,), EMPTY_OWNER, np.int32)
+    owner[:n_seed] = SEED_OWNER
+    return RelayState(obs=jnp.asarray(obs), valid=jnp.asarray(valid),
+                      owner=jnp.asarray(owner),
+                      ptr=jnp.asarray(n_seed % cap, jnp.int32),
+                      global_protos=jnp.asarray(protos),
+                      valid_g=jnp.ones((C,), bool),
+                      mean_logits=jnp.zeros((C, C), jnp.float32))
+
+
+# -- uplink (pure) ---------------------------------------------------------
+def buffer_append(state: RelayState, obs_rows, valid_rows, owner_rows,
+                  row_mask=None) -> RelayState:
+    """Write k observation rows into the ring (oldest-first overwrite).
+
+    obs_rows (k, C, d'), valid_rows (k, C), owner_rows (k,) int32,
+    row_mask (k,) bool or None. Rows with row_mask False are dropped
+    without consuming a ring slot (absent clients in a partial round).
+    The number of masked-in rows must not exceed capacity (scatter order
+    for duplicate ring indices is undefined); callers size the buffer with
+    `default_capacity`.
+    """
+    k = obs_rows.shape[0]
+    cap = state.obs.shape[0]
+    idx, new_ptr = base.ring_indices(state.ptr, k, cap, row_mask)
+    return state._replace(
+        obs=state.obs.at[idx].set(obs_rows.astype(jnp.float32), mode="drop"),
+        valid=state.valid.at[idx].set(valid_rows, mode="drop"),
+        owner=state.owner.at[idx].set(owner_rows.astype(jnp.int32),
+                                      mode="drop"),
+        ptr=new_ptr)
+
+
+def merge_round(state: RelayState, proto: prototypes.ProtoState,
+                logit: Optional[prototypes.ProtoState] = None) -> RelayState:
+    """Inter-client aggregation (the server's only computation, Alg. 1):
+    per-round recompute of t̄^c from the merged per-class sums."""
+    return base.merge_protos(state, proto, logit)
+
+
+# -- downlink (pure) -------------------------------------------------------
+def sample_teacher(state: RelayState, client_id, m_down: int, key) -> Dict:
+    """Observations of OTHER users, chosen at random (paper §4: 'downloads
+    the representations of another user chosen at random').
+
+    Pure and jit/vmap-compatible: uniform with-replacement sampling over the
+    ring slots not owned by `client_id`; falls back to the whole filled
+    buffer when every slot is the client's own, and to a zero/invalid
+    teacher when the buffer is entirely empty. Always returns the full
+    teacher dict (all keys, fixed shapes)."""
+    usable = state.owner != EMPTY_OWNER
+    others = usable & (state.owner != jnp.asarray(client_id, jnp.int32))
+    pool = jnp.where(jnp.any(others), others, usable)
+    any_pool = jnp.any(pool)
+    logits = jnp.where(pool, 0.0, -jnp.inf)
+    k_sample, k_pick = jax.random.split(jnp.asarray(key))
+    idx = jax.random.categorical(k_sample, logits, shape=(m_down,))
+    idx = jnp.where(any_pool, idx, 0)
+    obs = jnp.where(any_pool, state.obs[idx], 0.0)            # (M, C, d')
+    valid_o = jnp.where(any_pool, jnp.all(state.valid[idx], axis=0), False)
+    return {"global_protos": state.global_protos,
+            "valid_g": state.valid_g,
+            "obs": obs, "valid_o": valid_o,
+            "obs_pick": jax.random.randint(k_pick, (), 0, m_down,
+                                           dtype=jnp.int32),
+            "mean_logits": state.mean_logits}
+
+
+@dataclass(frozen=True)
+class FlatRelay(base.RelayPolicy):
+    """Policy wrapper over the module-level pure functions above."""
+    name: str = "flat"
+
+    def init_state(self, ccfg, d_feature, seed=0, capacity=None,
+                   n_clients=2):
+        return init_relay_state(ccfg, d_feature, seed, capacity, n_clients)
+
+    def append(self, state, obs_rows, valid_rows, owner_rows, row_mask=None):
+        return buffer_append(state, obs_rows, valid_rows, owner_rows,
+                             row_mask)
+
+    def sample_teacher(self, state, client_id, m_down, key):
+        return sample_teacher(state, client_id, m_down, key)
+
+    def merge_round(self, state, proto, logit=None):
+        return merge_round(state, proto, logit)
+
+    def debug_entries(self, state):
+        owner = np.asarray(state.owner)
+        return [{"obs": state.obs[i], "valid": state.valid[i],
+                 "owner": int(owner[i])}
+                for i in np.where(owner != EMPTY_OWNER)[0]]

@@ -1,0 +1,146 @@
+"""ParticipationSchedule — which clients take part in each round.
+
+Cross-device reality: clients skip rounds (straggler devices, dropped
+connections, duty-cycling). A schedule is a deterministic host-side function
+`mask(round_idx, n_clients) -> (N,) bool` consumed by BOTH engines, so the
+sequential oracle (which simply skips absent clients) and the vectorized
+engine (which masks the stacked client axis inside its single jitted round
+step) see byte-identical participation and stay equivalence-testable.
+
+Determinism is the load-bearing property: the mask depends only on the
+schedule's parameters and the round index — never on call order or hidden
+RNG state — so two independently constructed trainers agree round by round.
+
+`fixed_k` tells the vectorized engine whether the per-round participant
+count is a static number: when it is (uniform_k, cyclic), the engine gathers
+the k participants into a compact (k, ...) block and the round step costs
+O(k) instead of O(N) — real compute savings, not just masking. Variable-
+count schedules (bernoulli_p) return None and run full-width with masking.
+
+Semantics shared by both engines:
+  - absent clients neither download, update, nor upload; their params and
+    Adam moments are frozen for the round;
+  - the prototype merge averages over PRESENT clients only;
+  - the comm ledger bills only present clients;
+  - a round with zero participants leaves the relay state untouched
+    (no merge, no aging) — it is a pure no-op plus an eval.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def bcast_mask(vec, like):
+    """Broadcast a (k,) mask/weight vector against a (k, ...) leaf."""
+    return vec.reshape(vec.shape + (1,) * (like.ndim - 1))
+
+
+def freeze_absent(mask, new_tree, old_tree):
+    """THE masking semantics of partial participation, in one place:
+    present clients (mask True) take the freshly computed leaves, absent
+    clients keep their old ones bit-for-bit. Leading axis = clients."""
+    return jax.tree.map(
+        lambda n, o: jnp.where(bcast_mask(mask, n), n, o),
+        new_tree, old_tree)
+
+
+class ParticipationSchedule:
+    name: str = "abstract"
+
+    @property
+    def fixed_k(self) -> Optional[int]:
+        """Static per-round participant count, or None when it varies."""
+        return None
+
+    def mask(self, round_idx: int, n_clients: int) -> np.ndarray:
+        raise NotImplementedError
+
+
+@dataclass(frozen=True)
+class FullParticipation(ParticipationSchedule):
+    """Every client, every round (the seed engines' implicit schedule)."""
+    name: str = "full"
+
+    def mask(self, round_idx: int, n_clients: int) -> np.ndarray:
+        return np.ones((n_clients,), bool)
+
+
+@dataclass(frozen=True)
+class UniformK(ParticipationSchedule):
+    """k clients drawn uniformly without replacement each round (the
+    FedAvg-paper "random fraction" schedule)."""
+    k: int
+    seed: int = 0
+    name: str = "uniform_k"
+
+    @property
+    def fixed_k(self) -> Optional[int]:
+        return self.k
+
+    def mask(self, round_idx: int, n_clients: int) -> np.ndarray:
+        assert 0 < self.k <= n_clients, (self.k, n_clients)
+        rng = np.random.default_rng([self.seed, round_idx])
+        m = np.zeros((n_clients,), bool)
+        m[rng.choice(n_clients, self.k, replace=False)] = True
+        return m
+
+
+@dataclass(frozen=True)
+class Cyclic(ParticipationSchedule):
+    """Deterministic round-robin: round r serves clients
+    {(r·k + i) mod N : i < k}. Every client participates exactly k/N of the
+    time with worst-case wait ceil(N/k) rounds — the duty-cycle schedule."""
+    k: int
+    name: str = "cyclic"
+
+    @property
+    def fixed_k(self) -> Optional[int]:
+        return self.k
+
+    def mask(self, round_idx: int, n_clients: int) -> np.ndarray:
+        assert 0 < self.k <= n_clients, (self.k, n_clients)
+        m = np.zeros((n_clients,), bool)
+        m[(round_idx * self.k + np.arange(self.k)) % n_clients] = True
+        return m
+
+
+@dataclass(frozen=True)
+class BernoulliP(ParticipationSchedule):
+    """Each client independently present with probability p (dropout-style;
+    the participant count varies round to round, possibly to zero)."""
+    p: float
+    seed: int = 0
+    name: str = "bernoulli_p"
+
+    def mask(self, round_idx: int, n_clients: int) -> np.ndarray:
+        assert 0.0 <= self.p <= 1.0, self.p
+        rng = np.random.default_rng([self.seed, round_idx])
+        return rng.random(n_clients) < self.p
+
+
+def get_schedule(spec, seed: int = 0) -> ParticipationSchedule:
+    """Parse a CLI-style schedule spec into a schedule object.
+
+    Specs: "full" | "uniform_k:K" | "cyclic:K" | "bernoulli:P", e.g.
+    "uniform_k:8" or "bernoulli:0.5". A ParticipationSchedule instance
+    passes through unchanged; None means full participation.
+    """
+    if spec is None:
+        return FullParticipation()
+    if isinstance(spec, ParticipationSchedule):
+        return spec
+    name, _, arg = str(spec).partition(":")
+    if name == "full":
+        return FullParticipation()
+    if name == "uniform_k":
+        return UniformK(k=int(arg), seed=seed)
+    if name == "cyclic":
+        return Cyclic(k=int(arg))
+    if name in ("bernoulli", "bernoulli_p"):
+        return BernoulliP(p=float(arg), seed=seed)
+    raise ValueError(f"unknown participation schedule: {spec!r}")

@@ -1,0 +1,157 @@
+"""Per-class ring relay — the paper's exact buffer layout (§4, Alg. 1).
+
+The paper's server keeps one observation buffer PER CLASS ("S stores the
+received observations in the corresponding class buffers"), not one flat
+ring: a class a client uploads often cannot evict other classes' history.
+State is (C, cap_c, d') with per-class-slot validity/owner/age and one write
+pointer per class; the downlink samples m_down slots per class independently
+(uniform over other clients' valid slots in that class's ring).
+
+The flat ring conflates retention across classes — under label-skewed
+partitions a majority class overwrites minority-class observations. The
+per-class layout is the fix, and `age` (rounds since the slot was written,
+maintained by `merge_round`) is recorded per slot so retention studies and
+the staleness policy's sampling math share one bookkeeping scheme.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.relay import base
+from repro.relay.base import EMPTY_OWNER, SEED_OWNER
+from repro.types import CollabConfig
+
+
+class PerClassRelayState(NamedTuple):
+    """obs (C, cap_c, d') f32; valid/age (C, cap_c); owner (C, cap_c) int32;
+    ptr (C,) int32 — one independent ring per class — plus the shared
+    prototype fields (see relay/base.py)."""
+    obs: jax.Array
+    valid: jax.Array
+    owner: jax.Array
+    age: jax.Array
+    ptr: jax.Array
+    global_protos: jax.Array
+    valid_g: jax.Array
+    mean_logits: jax.Array
+
+    @property
+    def capacity(self) -> int:
+        """Per-class slot count cap_c."""
+        return self.obs.shape[1]
+
+
+@dataclass(frozen=True)
+class PerClassRelay(base.RelayPolicy):
+    name: str = "per_class"
+
+    def init_state(self, ccfg: CollabConfig, d_feature: int, seed: int = 0,
+                   capacity: Optional[int] = None,
+                   n_clients: int = 2) -> PerClassRelayState:
+        """Same Algorithm-1 init as the flat ring (random common-anchor
+        prototypes + seeded observations), per class. `capacity` is the
+        per-class slot count cap_c; the default matches the flat ring's
+        slot count, so total storage (slots × C rows) is identical."""
+        C = ccfg.num_classes
+        cap_c = (base.default_capacity(ccfg, n_clients) if capacity is None
+                 else capacity)
+        assert cap_c > 0, "per-class relay capacity must be positive"
+        n_seed = min(cap_c, max(1, ccfg.m_down))
+        rng = np.random.default_rng(seed)
+        protos = rng.normal(size=(C, d_feature)).astype(np.float32) * 0.01
+        obs = np.zeros((C, cap_c, d_feature), np.float32)
+        obs[:, :n_seed] = rng.normal(
+            size=(C, n_seed, d_feature)).astype(np.float32) * 0.01
+        valid = np.zeros((C, cap_c), bool)
+        valid[:, :n_seed] = True
+        owner = np.full((C, cap_c), EMPTY_OWNER, np.int32)
+        owner[:, :n_seed] = SEED_OWNER
+        return PerClassRelayState(
+            obs=jnp.asarray(obs), valid=jnp.asarray(valid),
+            owner=jnp.asarray(owner),
+            age=jnp.zeros((C, cap_c), jnp.int32),
+            ptr=jnp.full((C,), n_seed % cap_c, jnp.int32),
+            global_protos=jnp.asarray(protos),
+            valid_g=jnp.ones((C,), bool),
+            mean_logits=jnp.zeros((C, C), jnp.float32))
+
+    # -- uplink (pure) -----------------------------------------------------
+    def append(self, state: PerClassRelayState, obs_rows, valid_rows,
+               owner_rows, row_mask=None) -> PerClassRelayState:
+        """Scatter k uploaded rows into their class rings.
+
+        obs_rows (k, C, d'), valid_rows (k, C), owner_rows (k,),
+        row_mask (k,) bool or None. Row i contributes its class-c slice to
+        ring c only when valid_rows[i, c] (the client had samples of class
+        c) and row_mask[i]; each ring's pointer advances by its own write
+        count. Per class, writes land in row order — identical to appending
+        the rows one by one — so the sequential oracle (one append per
+        client) and the vectorized engine (one batched append) evolve the
+        same rings. Masked-in writes per class must not exceed cap_c."""
+        k, C = valid_rows.shape
+        cap_c = state.obs.shape[1]
+        if row_mask is None:
+            row_mask = jnp.ones((k,), bool)
+        w = valid_rows & row_mask[:, None]                     # (k, C)
+        offs = jnp.cumsum(w.astype(jnp.int32), axis=0) - 1
+        slot = jnp.where(w, (state.ptr[None, :] + offs) % cap_c,
+                         cap_c).astype(jnp.int32)              # (k, C)
+        cidx = jnp.broadcast_to(jnp.arange(C, dtype=jnp.int32)[None], (k, C))
+        owner_b = jnp.broadcast_to(owner_rows.astype(jnp.int32)[:, None],
+                                   (k, C))
+        return state._replace(
+            obs=state.obs.at[cidx, slot].set(
+                obs_rows.astype(jnp.float32), mode="drop"),
+            valid=state.valid.at[cidx, slot].set(True, mode="drop"),
+            owner=state.owner.at[cidx, slot].set(owner_b, mode="drop"),
+            age=state.age.at[cidx, slot].set(0, mode="drop"),
+            ptr=(state.ptr + jnp.sum(w.astype(jnp.int32), axis=0)) % cap_c)
+
+    # -- downlink (pure) ---------------------------------------------------
+    def sample_teacher(self, state: PerClassRelayState, client_id,
+                       m_down: int, key) -> Dict:
+        """Per-class uniform sampling over OTHER clients' valid slots.
+
+        For each class c independently: sample m_down slots from ring c's
+        pool (others' valid slots; falls back to all valid slots when every
+        one is the requester's own, and to a zero/invalid teacher row for
+        classes whose ring is empty). Teacher obs[m, c] = ring_c[slot]."""
+        C, cap_c = state.valid.shape
+        usable = state.valid                                    # (C, cap_c)
+        others = usable & (state.owner != jnp.asarray(client_id, jnp.int32))
+        pool = jnp.where(jnp.any(others, axis=1, keepdims=True), others,
+                         usable)
+        any_pool = jnp.any(pool, axis=1)                        # (C,)
+        # uniform over the pool; empty classes get a uniform dummy row so
+        # categorical stays well-defined, then the gather is zeroed out.
+        logits = jnp.where(pool, 0.0, -jnp.inf)
+        logits = jnp.where(any_pool[:, None], logits, 0.0)
+        k_sample, k_pick = jax.random.split(jnp.asarray(key))
+        idx = jax.random.categorical(k_sample, logits,
+                                     shape=(m_down, C))         # (M, C)
+        obs = state.obs[jnp.arange(C, dtype=jnp.int32)[None, :], idx]
+        obs = jnp.where(any_pool[None, :, None], obs, 0.0)      # (M, C, d')
+        return {"global_protos": state.global_protos,
+                "valid_g": state.valid_g,
+                "obs": obs, "valid_o": any_pool,
+                "obs_pick": jax.random.randint(k_pick, (), 0, m_down,
+                                               dtype=jnp.int32),
+                "mean_logits": state.mean_logits}
+
+    def merge_round(self, state, proto, logit=None):
+        state = base.merge_protos(state, proto, logit)
+        return state._replace(age=jnp.where(state.valid, state.age + 1,
+                                            state.age))
+
+    def debug_entries(self, state):
+        valid = np.asarray(state.valid)
+        owner = np.asarray(state.owner)
+        return [{"obs": state.obs[c, s], "class": int(c),
+                 "valid": bool(valid[c, s]), "owner": int(owner[c, s]),
+                 "age": int(np.asarray(state.age)[c, s])}
+                for c, s in zip(*np.where(valid))]

@@ -1,0 +1,89 @@
+"""Stateful relay wrapper for the sequential `CollabTrainer` path.
+
+`RelayServer` binds a `RelayPolicy` to a live state pytree and exposes the
+upload/relay/merge cadence of paper Algorithm 1. The vectorized engine never
+uses this class — it closes over the policy's pure functions inside its
+jitted round step — but both paths evolve the same state because the policy
+functions are shared and the call order (appends in client-id order, then
+one merge) is identical.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import prototypes
+from repro.relay import base, flat
+from repro.types import CollabConfig
+
+
+@partial(jax.jit, static_argnums=(0, 3))
+def _sample_teacher_jit(policy, state, client_id, m_down, key):
+    """Module-level jit so the compile cache is shared across RelayServer
+    instances: policies are frozen dataclasses (hashable, equal by fields),
+    so every server with an equal policy reuses one trace."""
+    return policy.sample_teacher(state, client_id, m_down, key)
+
+
+class RelayServer:
+    def __init__(self, ccfg: CollabConfig, d_feature: int, seed: int = 0,
+                 capacity: Optional[int] = None, n_clients: int = 2,
+                 policy: Optional[base.RelayPolicy] = None):
+        self.ccfg = ccfg
+        self.d = d_feature
+        self.policy = policy if policy is not None else flat.FlatRelay()
+        self.state = self.policy.init_state(ccfg, d_feature, seed, capacity,
+                                            n_clients)
+        self.round_states: List[prototypes.ProtoState] = []
+        self.round_logit_states: List[prototypes.ProtoState] = []
+
+    # -- uplink ------------------------------------------------------------
+    def begin_round(self):
+        self.round_states = []
+        self.round_logit_states = []
+
+    def upload(self, client_id: int, payload: Dict):
+        self.round_states.append(payload["proto"])
+        if "logit_proto" in payload:
+            self.round_logit_states.append(payload["logit_proto"])
+        obs = payload["obs"]                                  # (M_up, C, d')
+        m = obs.shape[0]
+        self.state = self.policy.append(
+            self.state, obs,
+            jnp.broadcast_to(payload["valid"], (m,) + payload["valid"].shape),
+            jnp.full((m,), client_id, jnp.int32))
+
+    def end_round(self):
+        if self.round_states:
+            merged = prototypes.merge(*self.round_states)
+            logit = (prototypes.merge(*self.round_logit_states)
+                     if self.round_logit_states else None)
+            self.state = self.policy.merge_round(self.state, merged, logit)
+
+    # -- downlink ----------------------------------------------------------
+    def relay(self, client_id: int, m_down: int, key) -> Dict:
+        return _sample_teacher_jit(self.policy, self.state,
+                                   jnp.asarray(client_id, jnp.int32),
+                                   m_down, key)
+
+    # -- introspection (tests / notebooks) ---------------------------------
+    @property
+    def global_protos(self) -> jax.Array:
+        return self.state.global_protos
+
+    @property
+    def valid_g(self) -> jax.Array:
+        return self.state.valid_g
+
+    @property
+    def mean_logits(self) -> jax.Array:
+        return self.state.mean_logits
+
+    @property
+    def obs_buffer(self) -> List[Dict]:
+        """Filled slots as a list of entry dicts (compat view; every entry
+        carries an "owner" key, including seeded/fallback entries)."""
+        return self.policy.debug_entries(self.state)

@@ -1,0 +1,133 @@
+"""Staleness-weighted relay — age-decayed sampling over the flat ring.
+
+In a cross-device deployment with partial participation, ring slots can be
+many rounds old; a representation uploaded 50 rounds ago was produced by a
+model that no longer exists, and uniform sampling keeps relaying it. This
+policy tracks per-slot age (rounds since upload, incremented in
+`merge_round`, reset to 0 on write) and samples teachers with probability
+∝ exp(-λ·age) over the eligible pool.
+
+Sampling is a jittable Gumbel-top-k: add i.i.d. Gumbel noise to the masked
+log-weights (-λ·age over the pool, -inf outside) and take the top m_down
+scores — an exact draw of m_down slots WITHOUT replacement from the
+exp(-λ·age) distribution (Gumbel-max trick), with no rejection loop and no
+data-dependent shapes. λ=0 recovers uniform-without-replacement over the
+pool; large λ degenerates to "freshest slots only".
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.relay import base, flat
+from repro.relay.base import EMPTY_OWNER
+from repro.types import CollabConfig
+
+
+class StalenessRelayState(NamedTuple):
+    """Flat ring (see relay/flat.py) + per-slot age (cap,) int32."""
+    obs: jax.Array
+    valid: jax.Array
+    owner: jax.Array
+    age: jax.Array
+    ptr: jax.Array
+    global_protos: jax.Array
+    valid_g: jax.Array
+    mean_logits: jax.Array
+
+    @property
+    def capacity(self) -> int:
+        return self.obs.shape[0]
+
+
+def staleness_logweights(age, pool, lam: float):
+    """Masked log-weights: -λ·age over the pool, -inf outside. (cap,) f32."""
+    return jnp.where(pool, -lam * age.astype(jnp.float32), -jnp.inf)
+
+
+def staleness_weights(age, pool, lam: float):
+    """Normalized sampling distribution over the ring slots: softmax of the
+    masked log-weights. Sums to 1 whenever the pool is non-empty; zero on
+    slots outside the pool. Exposed for the property tests."""
+    return jax.nn.softmax(staleness_logweights(age, pool, lam))
+
+
+@dataclass(frozen=True)
+class StalenessRelay(base.RelayPolicy):
+    lam: float = 0.5
+    name: str = "staleness"
+
+    def init_state(self, ccfg: CollabConfig, d_feature: int, seed: int = 0,
+                   capacity: Optional[int] = None,
+                   n_clients: int = 2) -> StalenessRelayState:
+        """Flat-ring init + age 0 everywhere (seed slots count as fresh)."""
+        s = flat.init_relay_state(ccfg, d_feature, seed, capacity, n_clients)
+        return StalenessRelayState(
+            obs=s.obs, valid=s.valid, owner=s.owner,
+            age=jnp.zeros((s.obs.shape[0],), jnp.int32), ptr=s.ptr,
+            global_protos=s.global_protos, valid_g=s.valid_g,
+            mean_logits=s.mean_logits)
+
+    # -- uplink (pure) -----------------------------------------------------
+    def append(self, state: StalenessRelayState, obs_rows, valid_rows,
+               owner_rows, row_mask=None) -> StalenessRelayState:
+        """Flat ring append (delegated, so the masked-index math lives in
+        one place); written slots restart at age 0."""
+        idx, _ = base.ring_indices(state.ptr, obs_rows.shape[0],
+                                   state.obs.shape[0], row_mask)
+        state = flat.buffer_append(state, obs_rows, valid_rows, owner_rows,
+                                   row_mask)
+        return state._replace(age=state.age.at[idx].set(0, mode="drop"))
+
+    # -- downlink (pure) ---------------------------------------------------
+    def sample_teacher(self, state: StalenessRelayState, client_id,
+                       m_down: int, key) -> Dict:
+        """Gumbel-top-k draw of m_down slots ∝ exp(-λ·age), excluding the
+        requester's own uploads (same pool/fallback rules as the flat
+        policy). Draws are without replacement up to the pool size; when
+        the pool (or the ring itself) is smaller than m_down, the in-pool
+        picks are recycled round-robin instead of poisoning the teacher
+        with out-of-pool slots — matching the flat policy's tolerance of
+        any m_down. Bit-identical to a plain top-k when pool >= m_down."""
+        cap = state.owner.shape[0]
+        usable = state.owner != EMPTY_OWNER
+        others = usable & (state.owner != jnp.asarray(client_id, jnp.int32))
+        pool = jnp.where(jnp.any(others), others, usable)
+        any_pool = jnp.any(pool)
+        logw = staleness_logweights(state.age, pool, self.lam)
+        k_sample, k_pick = jax.random.split(jnp.asarray(key))
+        gumbel = jax.random.gumbel(k_sample, logw.shape)
+        kk = min(m_down, cap)
+        _, idx_k = jax.lax.top_k(logw + gumbel, kk)   # descending score:
+        # in-pool picks (finite scores) sort before out-of-pool (-inf) ones
+        p = jnp.sum(pool.astype(jnp.int32))
+        take = (jnp.arange(m_down, dtype=jnp.int32)
+                % jnp.maximum(jnp.minimum(p, kk), 1))
+        idx = jnp.where(any_pool, idx_k[take], 0)
+        obs = jnp.where(any_pool, state.obs[idx], 0.0)         # (M, C, d')
+        valid_o = jnp.where(any_pool,
+                            jnp.all(state.valid[idx] & pool[idx, None],
+                                    axis=0), False)
+        return {"global_protos": state.global_protos,
+                "valid_g": state.valid_g,
+                "obs": obs, "valid_o": valid_o,
+                "obs_pick": jax.random.randint(k_pick, (), 0, m_down,
+                                               dtype=jnp.int32),
+                "mean_logits": state.mean_logits}
+
+    def merge_round(self, state, proto, logit=None):
+        """Prototype merge + one round of aging for every live slot."""
+        state = base.merge_protos(state, proto, logit)
+        live = state.owner != EMPTY_OWNER
+        return state._replace(age=jnp.where(live, state.age + 1, state.age))
+
+    def debug_entries(self, state):
+        import numpy as np
+        owner = np.asarray(state.owner)
+        age = np.asarray(state.age)
+        return [{"obs": state.obs[i], "valid": state.valid[i],
+                 "owner": int(owner[i]), "age": int(age[i])}
+                for i in np.where(owner != EMPTY_OWNER)[0]]

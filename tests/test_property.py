@@ -8,6 +8,7 @@ pytest.importorskip("hypothesis", reason="hypothesis not installed (see "
                     "requirements-dev.txt); property tests skipped")
 from hypothesis import given, settings, strategies as st
 
+from repro import relay as relay_lib
 from repro.core import comm, losses, prototypes
 from repro.launch import roofline
 from repro.optim import cosine_schedule
@@ -120,3 +121,62 @@ def test_observation_within_feature_hull(seed, n, C):
     o = np.asarray(obs[0])[v]
     assert (o >= np.asarray(lo)[None] - 1e-5).all()
     assert (o <= np.asarray(hi)[None] + 1e-5).all()
+
+
+@given(cap=st.integers(2, 8), k=st.integers(1, 8), C=st.integers(2, 5),
+       seed=st.integers(0, 2**31 - 1))
+@settings(**SET)
+def test_per_class_ring_wraparound(cap, k, C, seed):
+    """Appending k rows to a per-class ring: each class's pointer advances
+    by its own (masked) write count mod cap_c and every masked-in write
+    lands in consecutive ring slots — for any valid/mask pattern. (Writes
+    per class are capped at cap_c per append, so slots are distinct.)"""
+    from repro.types import CollabConfig
+    k = min(k, cap)                               # per-append contract
+    rng = np.random.default_rng(seed)
+    ccfg = CollabConfig(num_classes=C, d_feature=2, m_down=1)
+    pol = relay_lib.PerClassRelay()
+    state = pol.init_state(ccfg, 2, seed=0, capacity=cap)
+    ptr0 = np.asarray(state.ptr).copy()
+    valid_rows = rng.random((k, C)) < 0.7
+    row_mask = rng.random((k,)) < 0.7
+    obs_rows = jnp.arange(1, k + 1, dtype=jnp.float32)[:, None, None] \
+        * jnp.ones((k, C, 2))
+    state = pol.append(state, obs_rows, jnp.asarray(valid_rows),
+                       jnp.arange(k, dtype=jnp.int32),
+                       row_mask=jnp.asarray(row_mask))
+    w = valid_rows & row_mask[:, None]            # (k, C) actual writes
+    np.testing.assert_array_equal(
+        np.asarray(state.ptr), (ptr0 + w.sum(axis=0)) % cap)
+    obs = np.asarray(state.obs)
+    age = np.asarray(state.age)
+    valid = np.asarray(state.valid)
+    for c in range(C):
+        for j, r in enumerate(np.nonzero(w[:, c])[0]):
+            slot = (ptr0[c] + j) % cap            # j-th write of class c
+            np.testing.assert_allclose(obs[c, slot], float(r + 1))
+            assert age[c, slot] == 0
+            assert bool(valid[c, slot])
+
+
+@given(cap=st.integers(1, 32), lam=st.floats(0.0, 4.0),
+       seed=st.integers(0, 2**31 - 1))
+@settings(**SET)
+def test_staleness_weights_normalize(cap, lam, seed):
+    """The staleness sampling distribution is a proper distribution: sums
+    to 1 over any non-empty pool, puts zero mass outside it, and never
+    weights an older slot above a fresher one."""
+    rng = np.random.default_rng(seed)
+    age = jnp.asarray(rng.integers(0, 100, cap), jnp.int32)
+    pool = rng.random(cap) < 0.6
+    if not pool.any():
+        pool[rng.integers(0, cap)] = True
+    w = np.asarray(relay_lib.staleness_weights(age, jnp.asarray(pool), lam))
+    np.testing.assert_allclose(w.sum(), 1.0, rtol=1e-5)
+    assert (w[~pool] == 0.0).all()
+    ages = np.asarray(age)
+    inpool = np.nonzero(pool)[0]
+    for i in inpool:
+        for j in inpool:
+            if ages[i] < ages[j]:
+                assert w[i] >= w[j] - 1e-7

@@ -1,0 +1,318 @@
+"""Relay-policy + participation subsystem (src/repro/relay/).
+
+The tentpole invariant: for EVERY (relay policy × participation schedule ×
+mode) combination, the sequential oracle and the vectorized engine evolve
+the same relay state (exact ring bookkeeping, obs within float tolerance)
+and the same per-round records. Plus policy unit mechanics (per-class rings,
+staleness aging/sampling), schedule determinism, and the jit-cache
+assertions (one round step per (policy, schedule); compute_uploads traces
+once per spec).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import relay as relay_lib
+from repro.core import client as client_lib, collab, prototypes, vec_collab
+from repro.data import partition, synthetic
+from repro.models import mlp
+from repro.types import CollabConfig, TrainConfig
+
+SPEC = client_lib.ClientSpec(
+    apply=lambda p, x: mlp.apply(p, x),
+    head=lambda p: (p["head_w"], p["head_b"]))
+
+POLICIES = ["flat", "per_class", "staleness"]
+SCHEDULES = ["full", "uniform_k:2", "bernoulli:0.5"]
+
+
+def _build(engine, policy, schedule, mode="cors", n_clients=4, n=256,
+           seed=0):
+    x, y = synthetic.class_images(n, seed=0, noise=0.4)
+    tx, ty = synthetic.class_images(128, seed=9, noise=0.4)
+    parts = partition.uniform_split(x, y, n_clients, seed=1)
+    ccfg = CollabConfig(mode=mode, num_classes=10, d_feature=84,
+                        lambda_kd=2.0,
+                        lambda_disc=1.0 if mode == "cors" else 0.0)
+    tcfg = TrainConfig(batch_size=16)
+    params = [mlp.init_mlp(k)
+              for k in jax.random.split(jax.random.PRNGKey(seed), n_clients)]
+    cls = (collab.CollabTrainer if engine == "seq"
+           else vec_collab.VectorizedCollabTrainer)
+    return cls([SPEC] * n_clients, params, parts, (tx, ty), ccfg, tcfg,
+               seed=seed, policy=policy, schedule=schedule)
+
+
+def _assert_states_match(ss, vs):
+    """Ring bookkeeping must be EXACT; observations are float-tolerant
+    (vmap-batched update association)."""
+    np.testing.assert_array_equal(np.asarray(ss.ptr), np.asarray(vs.ptr))
+    np.testing.assert_array_equal(np.asarray(ss.owner), np.asarray(vs.owner))
+    np.testing.assert_array_equal(np.asarray(ss.valid), np.asarray(vs.valid))
+    if hasattr(ss, "age"):
+        np.testing.assert_array_equal(np.asarray(ss.age), np.asarray(vs.age))
+    np.testing.assert_allclose(np.asarray(ss.obs), np.asarray(vs.obs),
+                               atol=5e-3)
+    np.testing.assert_allclose(np.asarray(ss.global_protos),
+                               np.asarray(vs.global_protos), atol=5e-3)
+    np.testing.assert_array_equal(np.asarray(ss.valid_g),
+                                  np.asarray(vs.valid_g))
+
+
+# ---------------------------------------------------------------------------
+# tentpole: seq/vec equivalence for every (policy × schedule × mode)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("schedule", SCHEDULES)
+@pytest.mark.parametrize("mode", ["cors", "fd"])
+def test_seq_vec_equivalence(policy, schedule, mode):
+    seq = _build("seq", policy, schedule, mode=mode)
+    vec = _build("vec", policy, schedule, mode=mode)
+    for _ in range(2):
+        rs, rv = seq.run_round(), vec.run_round()
+        assert rs["participants"] == rv["participants"]
+        np.testing.assert_allclose(rs["accs"], rv["accs"], atol=2e-2)
+    assert seq.ledger.by_round == vec.ledger.by_round
+    assert seq.ledger.total_bytes == vec.ledger.total_bytes
+    _assert_states_match(seq.server.state, vec.relay_state)
+
+
+def test_absent_clients_frozen_and_unbilled():
+    """cyclic:1 at N=3: exactly one client moves per round, the others'
+    params stay bit-identical, and the ledger bills one client."""
+    vec = _build("vec", "flat", "cyclic:1", n_clients=3, n=192)
+    before = [jax.tree.map(np.asarray, vec.client_params(i))
+              for i in range(3)]
+    rec = vec.run_round()
+    assert rec["participants"] == [0]
+    after = [jax.tree.map(np.asarray, vec.client_params(i))
+             for i in range(3)]
+    for i in (1, 2):
+        jax.tree.map(np.testing.assert_array_equal, before[i], after[i])
+    with pytest.raises(AssertionError):
+        jax.tree.map(np.testing.assert_array_equal, before[0], after[0])
+    ccfg = vec.ccfg
+    per_client = (ccfg.m_up + 1) * ccfg.num_classes * ccfg.d_feature
+    assert rec["comm_up"] == per_client        # ONE client billed
+    # absent clients report zero metrics with the full key set
+    assert rec["metrics"][1] == client_lib.zero_metrics(ccfg)
+
+
+def test_zero_participant_round_is_relay_noop():
+    """A bernoulli round where nobody shows up must leave the relay state
+    untouched (no merge, no aging) in BOTH engines."""
+
+    class NoShow(relay_lib.ParticipationSchedule):
+        name = "noshow"
+
+        def mask(self, round_idx, n_clients):
+            return np.zeros((n_clients,), bool)
+
+    for engine in ("seq", "vec"):
+        tr = _build(engine, "staleness", NoShow(), n_clients=2, n=128)
+        state0 = (tr.server.state if engine == "seq" else tr.relay_state)
+        state0 = jax.tree.map(np.asarray, state0)
+        rec = tr.run_round()
+        assert rec["participants"] == []
+        assert rec["comm_up"] == rec["comm_down"] == 0.0
+        state1 = (tr.server.state if engine == "seq" else tr.relay_state)
+        jax.tree.map(np.testing.assert_array_equal, state0,
+                     jax.tree.map(np.asarray, state1))
+
+
+# ---------------------------------------------------------------------------
+# one compiled round step per (policy, schedule); jitted uploads per spec
+# ---------------------------------------------------------------------------
+def test_vec_round_step_compiles_once():
+    """Partial participation must not retrace: the mask and gather indices
+    are traced args of fixed shape, so 3 rounds = 1 compile."""
+    vec = _build("vec", "per_class", "uniform_k:2", n_clients=4, n=192)
+    for _ in range(3):
+        vec.run_round()
+    assert vec._round_step._cache_size() == 1
+
+
+def test_seq_compute_uploads_jitted_once_per_spec():
+    """Satellite (ROADMAP): the sequential oracle's upload computation runs
+    jitted, traced once per ClientSpec — not re-traced per round or per
+    client (it was eager before: ~20 ms dispatch per client per round)."""
+    seq = _build("seq", "flat", "full", n_clients=3, n=192)
+    for _ in range(3):
+        seq.run_round()
+    assert len(seq._upload_cache) == 1          # all clients share SPEC
+    fn = seq._upload_cache[SPEC]
+    assert fn._cache_size() == 1                # one trace, ever
+    seq.run_round()
+    assert seq._upload_cache[SPEC] is fn
+    assert fn._cache_size() == 1
+
+
+# ---------------------------------------------------------------------------
+# per-class ring mechanics
+# ---------------------------------------------------------------------------
+def _pc_state(cap=4, C=3, d=2, m_down=1):
+    ccfg = CollabConfig(num_classes=C, d_feature=d, m_down=m_down)
+    return relay_lib.PerClassRelay().init_state(ccfg, d, capacity=cap)
+
+
+def test_per_class_append_routes_rows_to_class_rings():
+    pol = relay_lib.PerClassRelay()
+    st = _pc_state(cap=4)
+    assert np.asarray(st.ptr).tolist() == [1, 1, 1]     # one seed per class
+    valid = jnp.asarray([[True, False, True],
+                         [True, True, False]])
+    st = pol.append(st, jnp.ones((2, 3, 2)), valid,
+                    jnp.asarray([7, 8], jnp.int32))
+    # class 0 got both rows, class 1 only row 1, class 2 only row 0
+    np.testing.assert_array_equal(np.asarray(st.ptr), [3, 2, 2])
+    owner = np.asarray(st.owner)
+    assert owner[0, 1] == 7 and owner[0, 2] == 8
+    assert owner[1, 1] == 8 and owner[2, 1] == 7
+    # untouched slots keep their seed/empty sentinels
+    assert owner[1, 2] == relay_lib.EMPTY_OWNER
+    assert owner[0, 0] == relay_lib.SEED_OWNER
+
+
+def test_per_class_sampling_excludes_own_and_respects_class_pools():
+    pol = relay_lib.PerClassRelay()
+    st = _pc_state(cap=4)
+    # class 0: only client 0's row; class 1: clients 0 and 1; class 2: empty
+    st = st._replace(
+        obs=jnp.zeros((3, 4, 2)).at[1, 1].set(5.0),
+        valid=jnp.asarray([[True, False, False, False],
+                           [True, True, False, False],
+                           [False, False, False, False]]),
+        owner=jnp.asarray([[0, -2, -2, -2],
+                           [0, 1, -2, -2],
+                           [-2, -2, -2, -2]], jnp.int32))
+    for s in range(6):
+        t = pol.sample_teacher(st, 0, 2, jax.random.PRNGKey(s))
+        # class 1 must come from client 1 (value 5), never client 0's zeros
+        np.testing.assert_allclose(np.asarray(t["obs"][:, 1]), 5.0)
+        # class 0 falls back to the requester's own slot (pool exhausted)
+        assert bool(t["valid_o"][0])
+        # class 2 ring is empty -> invalid, zero obs
+        assert not bool(t["valid_o"][2])
+        np.testing.assert_allclose(np.asarray(t["obs"][:, 2]), 0.0)
+
+
+def test_per_class_merge_ages_valid_slots_only():
+    pol = relay_lib.PerClassRelay()
+    st = _pc_state(cap=3)
+    proto = prototypes.init_state(3, 2)
+    st = pol.merge_round(st, prototypes.ProtoState(
+        proto.sum + 1.0, proto.count + 1.0))
+    age = np.asarray(st.age)
+    valid = np.asarray(st.valid)
+    assert (age[valid] == 1).all() and (age[~valid] == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# staleness mechanics
+# ---------------------------------------------------------------------------
+def _stale_state(cap=6, C=3, d=2, lam=1.0):
+    ccfg = CollabConfig(num_classes=C, d_feature=d, m_down=1)
+    pol = relay_lib.StalenessRelay(lam=lam)
+    return pol, pol.init_state(ccfg, d, capacity=cap)
+
+
+def test_staleness_age_lifecycle():
+    """Slots age by 1 per merge; overwriting a slot resets it to 0."""
+    pol, st = _stale_state(cap=3)
+    proto = prototypes.ProtoState(jnp.ones((3, 2)), jnp.ones((3,)))
+    st = pol.append(st, jnp.ones((1, 3, 2)), jnp.ones((1, 3), bool),
+                    jnp.asarray([0], jnp.int32))
+    st = pol.merge_round(st, proto)
+    st = pol.merge_round(st, proto)
+    np.testing.assert_array_equal(np.asarray(st.age), [2, 2, 0])
+    st = pol.append(st, jnp.full((1, 3, 2), 9.0), jnp.ones((1, 3), bool),
+                    jnp.asarray([1], jnp.int32))   # overwrites slot 2
+    np.testing.assert_array_equal(np.asarray(st.age), [2, 2, 0])
+    st = pol.merge_round(st, proto)
+    np.testing.assert_array_equal(np.asarray(st.age), [3, 3, 1])
+
+
+def test_staleness_sampling_prefers_fresh_slots():
+    """With large λ, old slots are (almost) never sampled: fill slots with
+    their age as the value and check the sampled teacher is fresh."""
+    pol, st = _stale_state(cap=6, lam=8.0)
+    st = st._replace(
+        obs=jnp.arange(6, dtype=jnp.float32)[:, None, None]
+        * jnp.ones((6, 3, 2)),
+        valid=jnp.ones((6, 3), bool),
+        owner=jnp.asarray([1, 1, 1, 1, 1, 1], jnp.int32),
+        age=jnp.asarray([0, 5, 5, 5, 5, 5], jnp.int32))
+    picks = [float(np.asarray(
+        pol.sample_teacher(st, 0, 1, jax.random.PRNGKey(s))["obs"]).max())
+        for s in range(40)]
+    assert np.mean([p == 0.0 for p in picks]) > 0.9
+
+
+def test_staleness_tolerates_m_down_beyond_pool_and_capacity():
+    """Flat-policy parity contract: any m_down works. m_down > capacity
+    must not crash (top_k k is clamped), and a pool smaller than m_down
+    recycles in-pool picks instead of invalidating the teacher."""
+    pol, st = _stale_state(cap=4, lam=1.0)
+    # pool for client 0 = client 1's two slots; m_down = 8 > cap = 4
+    st = st._replace(valid=jnp.ones((4, 3), bool),
+                     owner=jnp.asarray([0, 0, 1, 1], jnp.int32),
+                     obs=jnp.arange(4, dtype=jnp.float32)[:, None, None]
+                     * jnp.ones((4, 3, 2)))
+    t = pol.sample_teacher(st, 0, 8, jax.random.PRNGKey(0))
+    assert t["obs"].shape == (8, 3, 2)
+    assert bool(jnp.all(t["valid_o"]))           # NOT poisoned
+    vals = set(np.asarray(t["obs"]).reshape(8, -1)[:, 0].tolist())
+    assert vals <= {2.0, 3.0}                    # only client 1's slots
+
+
+def test_staleness_lam_zero_is_uniform_over_pool():
+    """λ=0 degenerates to uniform-without-replacement over others' slots."""
+    pol, st = _stale_state(cap=4, lam=0.0)
+    st = st._replace(valid=jnp.ones((4, 3), bool),
+                     owner=jnp.asarray([0, 1, 1, 1], jnp.int32),
+                     age=jnp.asarray([0, 0, 50, 100], jnp.int32),
+                     obs=jnp.arange(4, dtype=jnp.float32)[:, None, None]
+                     * jnp.ones((4, 3, 2)))
+    seen = set()
+    for s in range(60):
+        t = pol.sample_teacher(st, 0, 1, jax.random.PRNGKey(s))
+        v = float(np.asarray(t["obs"]).max())
+        assert v != 0.0                          # never the requester's own
+        seen.add(v)
+    assert seen == {1.0, 2.0, 3.0}               # all ages reachable
+
+
+# ---------------------------------------------------------------------------
+# participation schedules
+# ---------------------------------------------------------------------------
+def test_schedules_are_deterministic_and_sized():
+    for spec in ("full", "uniform_k:3", "cyclic:3", "bernoulli:0.4"):
+        a = relay_lib.get_schedule(spec, seed=5)
+        b = relay_lib.get_schedule(spec, seed=5)
+        for r in range(6):
+            np.testing.assert_array_equal(a.mask(r, 8), b.mask(r, 8))
+    uk = relay_lib.get_schedule("uniform_k:3", seed=1)
+    assert all(uk.mask(r, 8).sum() == 3 for r in range(10))
+    assert uk.fixed_k == 3
+
+
+def test_cyclic_covers_all_clients():
+    cy = relay_lib.get_schedule("cyclic:3")
+    hit = np.zeros(8, bool)
+    for r in range(3):                           # ceil(8/3) = 3 rounds
+        hit |= cy.mask(r, 8)
+    assert hit.all()
+
+
+def test_get_policy_and_schedule_specs():
+    assert isinstance(relay_lib.get_policy(None), relay_lib.FlatRelay)
+    assert relay_lib.get_policy("staleness:0.25").lam == 0.25
+    p = relay_lib.PerClassRelay()
+    assert relay_lib.get_policy(p) is p
+    with pytest.raises(ValueError):
+        relay_lib.get_policy("nope")
+    with pytest.raises(ValueError):
+        relay_lib.get_schedule("nope:3")
+    assert isinstance(relay_lib.get_schedule(None),
+                      relay_lib.FullParticipation)
