@@ -6,7 +6,6 @@ from __future__ import annotations
 
 import jax
 
-from benchmarks import common
 from repro.core import comm
 from repro.models import cnn
 

@@ -3,10 +3,7 @@ from __future__ import annotations
 
 import os
 import time
-from typing import Dict, List
-
 import jax
-import numpy as np
 
 from repro.core import client as client_lib, collab, vec_collab
 from repro.data import partition, synthetic
@@ -33,18 +30,52 @@ def data(seed=0):
     return (x, y), (tx, ty)
 
 
+def hetero_fleet(mix: str, n_clients: int, seed: int = 0):
+    """Build a mixed-architecture fleet from a mix spec like
+    "mlp:64,mlp:128" or "mlp:64,cnn:1" — entries are model:size
+    (mlp hidden width / cnn width multiplier), assigned round-robin so
+    buckets interleave across client ids (the hard case for the bucketed
+    engine's ordering). ONE ClientSpec object per entry, shared by all of
+    that entry's clients, so `client_lib.bucketize` stacks them."""
+    entries = []
+    for item in mix.split(","):
+        model, _, size = item.strip().partition(":")
+        size = int(size) if size else (64 if model == "mlp" else 1)
+        if model == "mlp":
+            spec = client_lib.ClientSpec(
+                apply=lambda p, x: mlp.apply(p, x),
+                head=lambda p: (p["head_w"], p["head_b"]))
+            init = lambda k, h=size: mlp.init_mlp(k, hidden=h)
+        elif model == "cnn":
+            spec = client_lib.ClientSpec(
+                apply=lambda p, x: cnn.apply(p, x),
+                head=lambda p: (p["head_w"], p["head_b"]))
+            init = lambda k, w=size: cnn.init_cnn(k, width=w)
+        else:
+            raise ValueError(f"unknown hetero mix entry: {item!r}")
+        entries.append((spec, init))
+    keys = jax.random.split(jax.random.PRNGKey(seed), n_clients)
+    specs = [entries[i % len(entries)][0] for i in range(n_clients)]
+    params = [entries[i % len(entries)][1](k) for i, k in enumerate(keys)]
+    return specs, params
+
+
 def make_trainer(mode: str, n_clients: int, *, lambda_kd: float = 10.0,
                  lambda_disc: float = 1.0, seed: int = 0, width: int = 1,
                  engine: str = "vec", batch_size: int = 32,
                  train_data=None, test_data=None, model: str = "cnn",
-                 policy=None, participation=None):
-    """Build a trainer without running it. engine: "vec" (default — all the
-    homogeneous-client benchmarks go through the vectorized round step) or
-    "seq" (the per-client Python-loop oracle). model: "cnn" (paper's LeNet)
-    or "mlp" (cheap-compute client, see models/mlp.py). policy /
-    participation: relay-policy and participation-schedule specs forwarded
-    to the trainer (see repro.relay.get_policy / get_schedule), e.g.
-    policy="per_class", participation="uniform_k:8"."""
+                 policy=None, participation=None, hetero: str = None):
+    """Build a trainer without running it. engine: "vec" (default — ALL
+    benchmark fleets go through the vectorized engine, homogeneous ones as
+    one fused round step and mixed ones bucketed; there is no seq
+    special-case for heterogeneous specs) or "seq" (the per-client
+    Python-loop oracle, any mix). model: "cnn" (paper's LeNet) or "mlp"
+    (cheap-compute client, see models/mlp.py). hetero: a `hetero_fleet`
+    mix spec (e.g. "mlp:64,mlp:128") that overrides `model`/`width` with a
+    mixed-architecture fleet. policy / participation: relay-policy and
+    participation-schedule specs forwarded to the trainer (see
+    repro.relay.get_policy / get_schedule), e.g. policy="per_class",
+    participation="uniform_k:8"."""
     if train_data is None or test_data is None:
         (x, y), test = data(seed)
     else:
@@ -62,15 +93,17 @@ def make_trainer(mode: str, n_clients: int, *, lambda_kd: float = 10.0,
                         lambda_disc=lambda_disc if mode_eff == "cors" else 0.0)
     tcfg = TrainConfig(batch_size=batch_size)
     keys = jax.random.split(jax.random.PRNGKey(seed), n_clients)
-    if model == "mlp":
-        spec = MLP_SPEC
+    if hetero is not None:
+        specs, params = hetero_fleet(hetero, n_clients, seed=seed)
+    elif model == "mlp":
+        specs = [MLP_SPEC] * n_clients
         params = [mlp.init_mlp(k, hidden=64 * width) for k in keys]
     else:
-        spec = SPEC
+        specs = [SPEC] * n_clients
         params = [cnn.init_cnn(k, width=width) for k in keys]
     cls = (vec_collab.VectorizedCollabTrainer if engine == "vec"
            else collab.CollabTrainer)
-    return cls([spec] * n_clients, params, parts, test, ccfg, tcfg, seed=seed,
+    return cls(specs, params, parts, test, ccfg, tcfg, seed=seed,
                policy=policy, schedule=participation)
 
 

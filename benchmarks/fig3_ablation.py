@@ -2,7 +2,6 @@
 over IL (upper-left corner of the grid = IL)."""
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks import common
 

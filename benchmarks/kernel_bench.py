@@ -4,7 +4,6 @@ CSV documents call cost of the exact shapes the CoRS loop uses."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from benchmarks.common import timeit
 from repro.kernels import ref

@@ -46,7 +46,6 @@ if __name__ == "__main__":
 
 def markdown(mesh="pod16x16"):
     """Render the §Roofline markdown table from artifacts."""
-    import json as _json
     rows = load(mesh)
     out = ["| arch | shape | compute | memory | collective | bottleneck | "
            "useful FLOPs | what would move the dominant term |",

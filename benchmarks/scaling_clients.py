@@ -18,7 +18,9 @@ Model choice matters for what you measure:
 
   PYTHONPATH=src python -m benchmarks.scaling_clients \
       [--clients 2,8,32,128] [--model mlp|cnn] [--rounds 3] \
-      [--participation-sweep] [--participation-n 32]
+      [--participation-sweep] [--participation-n 32] \
+      [--hetero [--mix mlp:32,mlp:64] [--hetero-n 32]] \
+      [--ci-gate [--out BENCH_ci.json] [--floor benchmarks/ci_floor.json]]
 
 CSV to stdout: model,n_clients,engine,s_per_round,speedup_vs_seq.
 
@@ -28,11 +30,27 @@ per round via the uniform_k schedule. The vectorized engine compacts the
 round step to the k participants, so both wall-clock AND comm volume per
 round should fall ≈ linearly with k/N.
 CSV: model,n_clients,k,s_per_round,comm_mb_per_round,speedup_vs_full.
+
+--hetero measures the BUCKETED engine on a mixed-architecture fleet
+(`common.hetero_fleet` mix spec, clients assigned round-robin so buckets
+interleave): one vmapped round step per bucket around the shared relay, vs
+the sequential oracle stepping every client individually. Same weak-scaling
+setup; the speedup column is the mixed-fleet vec-over-seq ratio.
+CSV: mix,n_clients,n_buckets,engine,s_per_round,speedup_vs_seq.
+
+--ci-gate is the CI benchmark-regression job (.github/workflows/ci.yml):
+run the tiny committed config from benchmarks/ci_floor.json (N=8 MLP, a few
+rounds), write the measurement to BENCH_ci.json (uploaded as a CI
+artifact), and exit 1 if the vec-over-seq per-round speedup falls below the
+committed floor. Re-baselining is documented in ci_floor.json itself and
+ROADMAP.md.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
+import sys
 import time
 
 from benchmarks import common
@@ -52,12 +70,68 @@ def time_rounds(trainer, rounds: int = 3) -> float:
     return (time.perf_counter() - t0) / rounds
 
 
-def bench(n_clients: int, engine: str, model: str, rounds: int) -> float:
-    train = synthetic.class_images(PER_CLIENT * n_clients, seed=0, noise=0.8)
+def bench(n_clients: int, engine: str, model: str, rounds: int,
+          hetero: str = None, per_client: int = None) -> float:
+    pc = per_client or PER_CLIENT
+    train = synthetic.class_images(pc * n_clients, seed=0, noise=0.8)
     test = synthetic.class_images(N_TEST, seed=99, noise=0.8)
     tr = common.make_trainer("cors", n_clients, engine=engine, model=model,
-                             batch_size=16, train_data=train, test_data=test)
+                             batch_size=16, train_data=train, test_data=test,
+                             hetero=hetero)
     return time_rounds(tr, rounds)
+
+
+def hetero_sweep(n_clients: int = 32, rounds: int = 3,
+                 mix: str = "mlp:32,mlp:64"):
+    """Mixed-spec fleet: bucketed vectorized engine vs sequential oracle.
+
+    The default mix keeps per-client compute cheap for the same reason the
+    homogeneous sweep defaults to "mlp": the ratio then measures the ENGINE
+    (O(N) Python dispatch vs one dispatch per bucket). Wider/conv mixes
+    (e.g. "mlp:64,mlp:128" or "...,cnn:1") shift both engines toward the
+    same compute and the ratio toward XLA's batching efficiency — measured
+    ~3.7x for the default vs ~2.6x for "mlp:64,mlp:128" at N=32 on a
+    2-core CPU."""
+    n_buckets = len(mix.split(","))
+    print("mix,n_clients,n_buckets,engine,s_per_round,speedup_vs_seq")
+    t_vec = bench(n_clients, "vec", "mlp", rounds, hetero=mix)
+    t_seq = bench(n_clients, "seq", "mlp", rounds, hetero=mix)
+    speedup = t_seq / t_vec
+    print(f"{mix},{n_clients},{n_buckets},seq,{t_seq:.4f},1.00")
+    print(f"{mix},{n_clients},{n_buckets},vec,{t_vec:.4f},{speedup:.2f}")
+    return speedup
+
+
+def ci_gate(out: str = "BENCH_ci.json",
+            floor_path: str = "benchmarks/ci_floor.json") -> int:
+    """The CI benchmark-regression gate. Measures the committed tiny config
+    and fails (exit 1) when vec-over-seq drops below the committed floor."""
+    with open(floor_path) as f:
+        floor = json.load(f)
+    cfg = floor["config"]
+    t_vec = bench(cfg["n_clients"], "vec", cfg["model"], cfg["rounds"],
+                  per_client=cfg["per_client"])
+    t_seq = bench(cfg["n_clients"], "seq", cfg["model"], cfg["rounds"],
+                  per_client=cfg["per_client"])
+    speedup = t_seq / t_vec
+    min_speedup = floor["min_speedup_vec_over_seq"]
+    result = {"config": cfg, "s_per_round_seq": t_seq,
+              "s_per_round_vec": t_vec, "speedup_vec_over_seq": speedup,
+              "min_speedup_vec_over_seq": min_speedup,
+              "passed": speedup >= min_speedup}
+    with open(out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"ci-gate: vec {t_vec:.4f}s/round, seq {t_seq:.4f}s/round -> "
+          f"{speedup:.2f}x (floor {min_speedup}x) "
+          f"[{'PASS' if result['passed'] else 'FAIL'}] -> {out}")
+    if not result["passed"]:
+        print(f"ci-gate: FAIL — vec-over-seq speedup {speedup:.2f}x is "
+              f"below the committed floor {min_speedup}x ({floor_path}). "
+              "Either a perf regression in the vectorized engine, or the "
+              "floor needs re-baselining (see that file).",
+              file=sys.stderr)
+        return 1
+    return 0
 
 
 def participation_sweep(n_clients: int = 32, rounds: int = 3,
@@ -112,8 +186,27 @@ if __name__ == "__main__":
                          "instead of the seq-vs-vec engine scaling")
     ap.add_argument("--participation-n", type=int, default=32,
                     help="N for the participation sweep")
+    ap.add_argument("--hetero", action="store_true",
+                    help="measure a mixed-architecture fleet through the "
+                         "bucketed engine vs the sequential oracle")
+    ap.add_argument("--mix", default="mlp:32,mlp:64",
+                    help="hetero mix spec (common.hetero_fleet), e.g. "
+                         "mlp:32,mlp:64 or mlp:64,mlp:96,cnn:1")
+    ap.add_argument("--hetero-n", type=int, default=32,
+                    help="N for the hetero sweep")
+    ap.add_argument("--ci-gate", action="store_true",
+                    help="run the CI benchmark-regression gate (config + "
+                         "floor from --floor; exit 1 below the floor)")
+    ap.add_argument("--out", default="BENCH_ci.json",
+                    help="ci-gate: where to write the measurement JSON")
+    ap.add_argument("--floor", default="benchmarks/ci_floor.json",
+                    help="ci-gate: committed config + speedup floor")
     args = ap.parse_args()
-    if args.participation_sweep:
+    if args.ci_gate:
+        sys.exit(ci_gate(args.out, args.floor))
+    elif args.hetero:
+        hetero_sweep(args.hetero_n, args.rounds, args.mix)
+    elif args.participation_sweep:
         participation_sweep(args.participation_n, args.rounds, args.model)
     else:
         main(tuple(int(c) for c in args.clients.split(",")), args.rounds,

@@ -7,9 +7,7 @@ model family, r = REPRO_BENCH_ROUNDS (env).
 """
 from __future__ import annotations
 
-import os
 
-import numpy as np
 
 from benchmarks import common
 

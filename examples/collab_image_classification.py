@@ -12,7 +12,7 @@ import jax
 from repro.checkpoint import save_pytree
 from repro.core import client as client_lib, collab, vec_collab
 from repro.data import partition, synthetic
-from repro.models import cnn
+from repro.models import cnn, mlp
 from repro.types import CollabConfig, TrainConfig
 
 
@@ -25,8 +25,13 @@ def main():
     ap.add_argument("--lambda-kd", type=float, default=2.0)
     ap.add_argument("--lambda-disc", type=float, default=1.0)
     ap.add_argument("--engine", default="vec", choices=["vec", "seq"],
-                    help="vec = one vmapped round step over all clients "
+                    help="vec = one vmapped round step per client bucket "
                          "(default); seq = per-client Python-loop oracle")
+    ap.add_argument("--hetero", action="store_true",
+                    help="mixed fleet (a CoRS selling point): odd client "
+                         "ids run an MLP instead of the LeNet; the vec "
+                         "engine buckets them (2 vmapped steps sharing one "
+                         "relay), no weights ever cross architectures")
     ap.add_argument("--relay-policy", default="flat",
                     help="server-side relay policy: flat | per_class | "
                          "staleness[:lam] (see src/repro/relay/README.md)")
@@ -42,19 +47,30 @@ def main():
     parts = partition.uniform_split(x, y, args.clients, seed=1)
     print(f"{args.clients} clients × {len(parts[0][0])} samples each, "
           f"mode={args.mode}, relay={args.relay_policy}, "
-          f"participation={args.participation}")
+          f"participation={args.participation}"
+          + (", hetero cnn/mlp fleet" if args.hetero else ""))
 
-    spec = client_lib.ClientSpec(
+    cnn_spec = client_lib.ClientSpec(
         apply=lambda p, xx: cnn.apply(p, xx),
         head=lambda p: (p["head_w"], p["head_b"]))
-    params = [cnn.init_cnn(k) for k in
-              jax.random.split(jax.random.PRNGKey(0), args.clients)]
+    mlp_spec = client_lib.ClientSpec(
+        apply=lambda p, xx: mlp.apply(p, xx),
+        head=lambda p: (p["head_w"], p["head_b"]))
+    keys = jax.random.split(jax.random.PRNGKey(0), args.clients)
+    if args.hetero:
+        specs = [cnn_spec if i % 2 == 0 else mlp_spec
+                 for i in range(args.clients)]
+        params = [cnn.init_cnn(k) if i % 2 == 0 else mlp.init_mlp(k)
+                  for i, k in enumerate(keys)]
+    else:
+        specs = [cnn_spec] * args.clients
+        params = [cnn.init_cnn(k) for k in keys]
     ccfg = CollabConfig(mode=args.mode, num_classes=10, d_feature=84,
                         lambda_kd=args.lambda_kd,
                         lambda_disc=args.lambda_disc)
     cls = (vec_collab.VectorizedCollabTrainer if args.engine == "vec"
            else collab.CollabTrainer)
-    trainer = cls([spec] * args.clients, params, parts,
+    trainer = cls(specs, params, parts,
                   (tx, ty), ccfg, TrainConfig(batch_size=32), seed=0,
                   policy=args.relay_policy, schedule=args.participation)
     trainer.run(args.rounds, log_every=max(1, args.rounds // 15))

@@ -10,7 +10,6 @@ import argparse
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_arch
 from repro.core import losses, prototypes

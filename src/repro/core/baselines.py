@@ -2,10 +2,9 @@
 plus helpers shared by IL/CL (which are CollabTrainer modes with no comm)."""
 from __future__ import annotations
 
-from typing import Any, List, Sequence
+from typing import Any, Sequence
 
 import jax
-import jax.numpy as jnp
 
 
 def fedavg_aggregate(params_list: Sequence[Any], weights=None):

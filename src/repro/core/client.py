@@ -7,8 +7,7 @@ discriminator. Works for the paper's CNNs and for LM adapters alike.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +21,45 @@ from repro.types import CollabConfig, TrainConfig
 class ClientSpec:
     apply: Callable  # (params, x) -> (features (B,d'), logits (B,C))
     head: Callable   # params -> (W (d',C), b (C,) | None)
+
+
+def bucket_key(spec: ClientSpec, params) -> Tuple:
+    """Stackability key of one client: clients can share a vmapped round
+    step iff they share BOTH the ClientSpec (same apply/head callables) and
+    the exact param pytree structure + leaf shapes/dtypes. Two clients with
+    the same spec but e.g. different hidden widths land in different
+    buckets — their param stacks cannot be concatenated."""
+    leaves, treedef = jax.tree.flatten(params)
+    return (spec, treedef,
+            tuple((tuple(leaf.shape), str(leaf.dtype)) for leaf in leaves))
+
+
+def bucketize(specs: Sequence[ClientSpec],
+              params_list: Sequence) -> List[Tuple[ClientSpec, List[int]]]:
+    """Group clients into stackable buckets: (spec, client-id list) pairs in
+    FIRST-APPEARANCE order, client-id order within a bucket.
+
+    This ordering is load-bearing: it is the order in which the bucketed
+    vectorized engine (core/vec_collab.py) appends each bucket's uploads to
+    the shared relay, and the sequential oracle (core/collab.py) uploads in
+    the same order so the two engines evolve identical ring state. For a
+    homogeneous fleet there is one bucket and the order degenerates to plain
+    client-id order — bit-compatible with the pre-bucketing engines.
+
+    Distinct-but-identical ClientSpec objects (e.g. two lambdas with the
+    same body) intentionally hash apart: callers that want clients stacked
+    together must share ONE spec object across them, which is also what
+    makes the per-spec jit caches effective."""
+    assert len(specs) == len(params_list)
+    buckets: Dict[Tuple, List[int]] = {}
+    order: List[Tuple] = []
+    for i, (s, p) in enumerate(zip(specs, params_list)):
+        k = bucket_key(s, p)
+        if k not in buckets:
+            buckets[k] = []
+            order.append(k)
+        buckets[k].append(i)
+    return [(k[0], buckets[k]) for k in order]
 
 
 def loss_fn(spec: ClientSpec, params, batch, teacher, ccfg: CollabConfig,

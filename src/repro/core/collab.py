@@ -6,13 +6,22 @@ reproduces the paper's Table 1 comparison semantics. Clients may have
 heterogeneous architectures in CoRS/FD modes (a selling point of the paper);
 FedAvg requires homogeneous models and asserts so.
 
-This sequential trainer is the ORACLE: it steps clients one-by-one and is
-the only path that supports heterogeneous client architectures. Rounds are
-synchronous (paper Algorithm 1 cadence): every client downloads from the
-relay state of the PREVIOUS round, then all upload — so the vectorized
-engine (core/vec_collab.py), which runs all clients in one vmapped step,
-evolves the exact same relay state given the same seeds (see
-`round_keys` for the shared per-round key schedule).
+This sequential trainer is the ORACLE: it steps clients one-by-one, for any
+mix of client architectures. Rounds are synchronous (paper Algorithm 1
+cadence): every client downloads from the relay state of the PREVIOUS
+round, then all upload — so the vectorized engine (core/vec_collab.py),
+which runs each spec-bucket of clients in one vmapped step, evolves the
+exact same relay state given the same seeds (see `round_keys` for the
+shared per-round key schedule).
+
+Upload ordering: uploads happen in BUCKET order (client_lib.bucketize —
+clients grouped by stackable (spec, param-shape) key in first-appearance
+order, client-id order within a bucket), because that is the order in which
+the bucketed engine writes each bucket's observation rows into the shared
+relay ring. For a homogeneous fleet this degenerates to plain client-id
+order, i.e. exactly the pre-bucketing behavior. Downloads are order-free
+(every present client reads the same round-start state) and the per-client
+key schedule is indexed by client id, so ordering changes nothing else.
 
 Server behavior is pluggable via `policy` (a repro.relay RelayPolicy spec:
 "flat" | "per_class" | "staleness") and `schedule` (a participation
@@ -23,8 +32,8 @@ client axis is tested against (tests/test_relay_policies.py).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -69,6 +78,12 @@ class CollabTrainer:
                         data_x=x, data_y=y)
             for s, p, (x, y) in zip(specs, params_list, client_data)]
         self.test_x, self.test_y = test_data
+        # Relay-write order shared with the bucketed vectorized engine:
+        # bucket by bucket, client-id order within a bucket (identity for
+        # homogeneous fleets). See the module docstring.
+        self._upload_order = [
+            i for _, ids in client_lib.bucketize(specs, params_list)
+            for i in ids]
         self.policy = relay_lib.get_policy(policy)
         self.schedule = relay_lib.get_schedule(schedule, seed=seed)
         self.server = relay_lib.RelayServer(ccfg, ccfg.d_feature, seed,
@@ -128,7 +143,9 @@ class CollabTrainer:
         # only; a zero-participant round leaves the relay state untouched
         if mode in ("cors", "fd"):
             self.server.begin_round()
-            for i in present:
+            for i in self._upload_order:
+                if not mask[i]:
+                    continue
                 c = self.clients[i]
                 payload = self._upload_fn(c.spec)(c.params, c.data_x,
                                                   c.data_y, upl_ks[i])

@@ -11,7 +11,6 @@ Per round and per client, in floats (×4 bytes fp32 on the wire):
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict
 
 BYTES = 4
 

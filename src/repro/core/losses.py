@@ -13,8 +13,6 @@ Two regimes:
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
-
 import jax
 import jax.numpy as jnp
 

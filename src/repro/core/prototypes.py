@@ -11,7 +11,7 @@ kernels/proto_accum.py; the jnp path below is the oracle and the default).
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

@@ -35,12 +35,33 @@ device vmaps its local client shard and the only cross-device collectives
 are the prototype merge (`prototypes.psum_merge`, the paper's O(C·d')
 exchange) and the observation all-gather into the replicated ring buffer.
 
-Heterogeneous-architecture runs (different client models, a CoRS selling
-point) stay on the sequential oracle: stacking requires one ClientSpec.
+Heterogeneous-architecture fleets (different client models, a CoRS selling
+point) run BUCKETED: clients are grouped into stackable buckets by
+`client_lib.bucketize` (same ClientSpec AND same param shapes), each bucket
+gets its own jitted vmapped step (`make_bucket_update_step`), and all
+buckets share ONE relay state. CoRS only couples clients through the
+(C, d') representation pool — no weights cross the boundary — so the relay
+is the only cross-bucket synchronization point. The round is synchronous:
+
+  phase 1-3a  every bucket's downlink samples teachers from the SAME
+              round-start relay state, then updates + computes uploads,
+              independently per bucket (one dispatch per bucket, not per
+              client);
+  phase 3b    `make_relay_commit` appends all buckets' observation rows in
+              bucket order (= the order the sequential oracle uploads in,
+              see core/collab.py) and runs ONE prototype merge.
+
+The per-round key schedule is the oracle's `collab.round_keys`, indexed by
+ORIGINAL client id and sliced per bucket, so the sequential oracle remains
+the bit-exact reference for ring bookkeeping under any bucket mix
+(tests/test_hetero_bucketed.py). The mesh path and static-k compaction
+remain homogeneous-only: bucket participant counts vary per round even
+under fixed-k schedules, and per-bucket stacks have different shapes.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -58,13 +79,169 @@ def _stack(trees: Sequence[Any]):
     return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
 
 
+# ---------------------------------------------------------------------------
+# Reusable round-phase builders, parameterized by ClientSpec. Both the fused
+# homogeneous round step and the per-bucket heterogeneous steps are composed
+# from these, so the phase semantics exist in exactly one place.
+# ---------------------------------------------------------------------------
+def make_teacher_phase(policy: relay_lib.RelayPolicy, ccfg: CollabConfig):
+    """Phase 1 (downlink): vmapped teacher sampling from the relay buffers
+    for relay modes, a broadcast no-op teacher otherwise. Returns
+    `teachers(rstate, ids, relay_ks) -> teacher pytree (k, ...)`."""
+    mode = ccfg.mode
+    m_down = max(1, ccfg.m_down)
+
+    def teachers(rstate, ids, relay_ks):
+        if mode in ("cors", "fd"):
+            return jax.vmap(
+                lambda i, k: policy.sample_teacher(
+                    rstate, i, m_down, k))(ids, relay_ks)
+        et = client_lib.empty_teacher(ccfg)
+        k_loc = ids.shape[0]
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (k_loc,) + a.shape), et)
+
+    return teachers
+
+
+def make_upload_phase(spec: client_lib.ClientSpec, ccfg: CollabConfig):
+    """Phase 3a (uplink, compute side): vmapped `compute_uploads` flattened
+    into relay-ready pieces. Returns `uploads_of(params, data_x, data_y,
+    upl_ks, ids, mask) -> (proto, logit|None, obs_rows, valid_rows,
+    owner_rows, row_mask)` where absent clients' prototype sums are
+    zero-weighted and their observation rows masked out (dropped by the
+    relay append WITHOUT consuming ring slots)."""
+    mode = ccfg.mode
+
+    def uploads_of(p_s, dx, dy, upl_ks, ids_s, sub_mask):
+        wf = sub_mask.astype(jnp.float32)
+        uploads = jax.vmap(
+            lambda p, x, y, k: client_lib.compute_uploads(
+                spec, p, x, y, ccfg, k))(p_s, dx, dy, upl_ks)
+        proto = prototypes.ProtoState(
+            jnp.sum(uploads["proto"].sum * wf[:, None, None], axis=0),
+            jnp.sum(uploads["proto"].count * wf[:, None], axis=0))
+        logit = None
+        if mode == "fd":
+            logit = prototypes.ProtoState(
+                jnp.sum(uploads["logit_proto"].sum
+                        * wf[:, None, None], axis=0),
+                jnp.sum(uploads["logit_proto"].count
+                        * wf[:, None], axis=0))
+        m_real = uploads["obs"].shape[1]     # 0 when m_up == 0
+        obs_rows = uploads["obs"].reshape(-1, *uploads["obs"].shape[2:])
+        valid_rows = jnp.repeat(uploads["valid"], m_real, axis=0)
+        owner_rows = jnp.repeat(ids_s, m_real)
+        row_mask = jnp.repeat(sub_mask, m_real)
+        return proto, logit, obs_rows, valid_rows, owner_rows, row_mask
+
+    return uploads_of
+
+
+def make_relay_commit(policy: relay_lib.RelayPolicy):
+    """Phase 3b: the round's single relay write. `commit(rstate, payloads)`
+    takes the per-bucket upload payloads (in bucket order), concatenates
+    their observation rows, sums their prototype contributions, appends and
+    runs ONE prototype merge. Appending the concatenation equals appending
+    bucket-by-bucket: every policy's append writes rows in order and masked
+    rows consume no slots, so per-bucket uploads COMPOSE. The bucket count
+    and per-bucket row counts are fixed, so jitting this gives one trace —
+    and zero per-round eager concat/merge dispatches — for the whole run."""
+
+    def commit(rstate, payloads):
+        cat = lambda k: jnp.concatenate([p[k] for p in payloads])
+        proto = prototypes.merge(*[p["proto"] for p in payloads])
+        logit = (prototypes.merge(*[p["logit"] for p in payloads])
+                 if payloads[0]["logit"] is not None else None)
+        new = policy.append(rstate, cat("obs_rows"), cat("valid_rows"),
+                            cat("owner_rows"), cat("row_mask"))
+        return policy.merge_round(new, proto, logit)
+
+    return commit
+
+
+def make_bucket_update_step(spec: client_lib.ClientSpec, ccfg: CollabConfig,
+                            tcfg: TrainConfig,
+                            policy: relay_lib.RelayPolicy):
+    """One bucket's full-width masked round step against a FIXED relay
+    state: downlink + local updates + upload payloads (phases 1-3a). The
+    relay write (3b) is deliberately NOT here — the bucketed engine lets
+    every bucket read the same round-start state and then commits all
+    buckets' uploads in bucket order via `make_relay_commit`.
+
+    Returns a jitted `step(params, opt, rstate, batches, data_x, data_y,
+    ids, relay_ks, upd_ks, upl_ks, mask) -> (params, opt, metrics,
+    payload)`; `payload` is None outside relay modes. The mask is a traced
+    argument, so participation never retraces; one trace per bucket, ever.
+    """
+    mode = ccfg.mode
+    local_update = client_lib.make_local_update_fn(spec, ccfg, tcfg)
+    teachers = make_teacher_phase(policy, ccfg)
+    uploads_of = make_upload_phase(spec, ccfg)
+
+    def step(params, opt, rstate, batches, data_x, data_y, ids,
+             relay_ks, upd_ks, upl_ks, mask):
+        teacher = teachers(rstate, ids, relay_ks)
+        new_p, new_o, metrics = jax.vmap(local_update)(
+            params, opt, batches, teacher, upd_ks)
+        p_s = freeze_absent(mask, new_p, params)
+        o_s = freeze_absent(mask, new_o, opt)
+        metrics = jax.tree.map(
+            lambda m: jnp.where(_bcast(mask, m), m, 0.0), metrics)
+        payload = None
+        if mode in ("cors", "fd"):
+            proto, logit, obs_rows, valid_rows, owner_rows, row_mask = \
+                uploads_of(p_s, data_x, data_y, upl_ks, ids, mask)
+            payload = {"proto": proto, "logit": logit, "obs_rows": obs_rows,
+                       "valid_rows": valid_rows, "owner_rows": owner_rows,
+                       "row_mask": row_mask}
+        return p_s, o_s, metrics, payload
+
+    return jax.jit(step)
+
+
+def make_eval_hits(spec: client_lib.ClientSpec):
+    """Jitted stacked-client eval: logits for the whole client stack plus
+    argmax/compare/reduce INSIDE the jit, so one test chunk costs one
+    dispatch and returns a (k,) per-client hit-count vector (no eager
+    argmax ops, no host sync per chunk)."""
+
+    def hits(P, x, y):
+        lg = jax.vmap(lambda p: spec.apply(p, x)[1])(P)
+        return jnp.sum(jnp.argmax(lg, -1) == y[None], axis=-1)
+
+    return jax.jit(hits)
+
+
+@dataclass
+class ClientBucket:
+    """One stackable group of clients inside the bucketed engine: shared
+    ClientSpec + param shapes, params/opt/data stacked along a leading axis
+    of size len(ids), and the bucket's own jitted step/eval functions.
+    `ids` are ORIGINAL client ids (ascending), used for relay owner tags,
+    key-schedule slicing and participation-mask slicing."""
+    spec: client_lib.ClientSpec
+    ids: np.ndarray
+    params: Any
+    opt: Any
+    batches: Dict
+    data_x: jax.Array
+    data_y: jax.Array
+    step: Callable
+    eval_fn: Callable
+
+
 class VectorizedCollabTrainer:
-    """Drop-in counterpart of `CollabTrainer` for homogeneous clients.
+    """Drop-in counterpart of `CollabTrainer` for any client fleet.
 
     Same constructor shape, `run_round` record schema, `ledger` accounting
-    and `history`; `specs` may be a single ClientSpec or a sequence of the
-    SAME spec. Client datasets are trimmed to the shortest partition so they
-    stack; pass equal-size partitions for exact parity with the oracle.
+    and `history`; `specs` may be a single ClientSpec or a sequence. Clients
+    are grouped into stackable buckets (`client_lib.bucketize`); a
+    homogeneous fleet is ONE bucket and runs the fused single-step fast
+    path (static-k compaction, optional shard_map mesh), a mixed fleet runs
+    one vmapped step per bucket around a shared relay. Client datasets are
+    trimmed to the shortest partition within each bucket so they stack;
+    pass equal-size partitions for exact parity with the oracle.
     """
 
     def __init__(self,
@@ -77,34 +254,32 @@ class VectorizedCollabTrainer:
                  mesh=None, policy=None, schedule=None):
         if isinstance(specs, client_lib.ClientSpec):
             specs = [specs] * len(params_list)
-        assert all(s is specs[0] for s in specs), (
-            "VectorizedCollabTrainer needs homogeneous clients (one shared "
-            "ClientSpec); use the sequential CollabTrainer oracle for "
-            "heterogeneous architectures")
         assert len(specs) == len(params_list) == len(client_data)
-        self.spec = specs[0]
         self.ccfg, self.tcfg = ccfg, tcfg
         self.n_clients = N = len(params_list)
         self.mesh = mesh
         self.policy = relay_lib.get_policy(policy)
         self.schedule = relay_lib.get_schedule(schedule, seed=seed)
+        buckets = client_lib.bucketize(specs, params_list)
+        self.bucket_ids: List[List[int]] = [ids for _, ids in buckets]
+        self.hetero = len(buckets) > 1
+        if self.hetero:
+            if ccfg.mode == "fedavg":
+                raise ValueError(
+                    "FedAvg averages whole weight vectors, which needs one "
+                    f"shared architecture; got {len(buckets)} distinct "
+                    "(spec, param-shape) buckets. Heterogeneous fleets only "
+                    "make sense in representation-coupled modes "
+                    "('cors'/'fd') or independently ('il').")
+            if mesh is not None:
+                raise ValueError(
+                    "the shard_map mesh path needs one stacked client axis "
+                    f"of uniform shape; got {len(buckets)} buckets. Run "
+                    "heterogeneous fleets off-mesh (mesh=None), or shard "
+                    "each bucket separately (ROADMAP).")
         if mesh is not None:
             assert N % mesh.shape["clients"] == 0, (N, dict(mesh.shape))
 
-        n_common = min(x.shape[0] for x, _ in client_data)
-        self.data_x = jnp.stack([jnp.asarray(x[:n_common])
-                                 for x, _ in client_data])
-        self.data_y = jnp.stack([jnp.asarray(y[:n_common])
-                                 for _, y in client_data])
-        bs = tcfg.batch_size
-        nb = n_common // bs
-        self.batches = {
-            "x": self.data_x[:, :nb * bs].reshape(
-                N, nb, bs, *self.data_x.shape[2:]),
-            "y": self.data_y[:, :nb * bs].reshape(N, nb, bs)}
-
-        self.params = _stack(params_list)
-        self.opt_state = _stack([adam_init(p) for p in params_list])
         self.relay_state = self.policy.init_state(
             ccfg, ccfg.d_feature, seed, n_clients=N)
         self.test_x, self.test_y = (jnp.asarray(test_data[0]),
@@ -113,6 +288,15 @@ class VectorizedCollabTrainer:
         self.key = jax.random.PRNGKey(seed)
         self.history: List[Dict] = []
 
+        if self.hetero:
+            self._init_bucketed(buckets, params_list, client_data)
+            return
+
+        # -- homogeneous fast path: ONE bucket, fused round step ----------
+        self.spec = specs[0]
+        self.data_x, self.data_y, self.batches, self.params, self.opt_state \
+            = self._stack_clients(params_list, client_data)
+
         # Compaction: only off-mesh (gathering an arbitrary client subset
         # across a sharded axis would defeat shard_map's static layout) and
         # only when the schedule's per-round count is static.
@@ -120,13 +304,55 @@ class VectorizedCollabTrainer:
         self._k_active = (fixed_k if (mesh is None and fixed_k is not None)
                           else N)
         self._round_step = self._make_round_step()
-        spec = self.spec
-        self._eval_batched = jax.jit(
-            lambda P, x: jax.vmap(lambda p: spec.apply(p, x)[1])(P))
+        self._eval_hits = make_eval_hits(self.spec)
+
+    # ------------------------------------------------------------------
+    def _stack_clients(self, params_list, client_data):
+        """Stack a stackable client group: trimmed data, batched views,
+        params and fresh Adam state, all with a leading client axis."""
+        n_common = min(x.shape[0] for x, _ in client_data)
+        data_x = jnp.stack([jnp.asarray(x[:n_common])
+                            for x, _ in client_data])
+        data_y = jnp.stack([jnp.asarray(y[:n_common])
+                            for _, y in client_data])
+        k = len(params_list)
+        bs = self.tcfg.batch_size
+        nb = n_common // bs
+        batches = {
+            "x": data_x[:, :nb * bs].reshape(
+                k, nb, bs, *data_x.shape[2:]),
+            "y": data_y[:, :nb * bs].reshape(k, nb, bs)}
+        params = _stack(params_list)
+        opt = _stack([adam_init(p) for p in params_list])
+        return data_x, data_y, batches, params, opt
+
+    def _init_bucketed(self, buckets, params_list, client_data):
+        """Build the per-bucket engine: one ClientBucket (stacked state +
+        jitted step) per stackable group, a shared jitted relay commit, and
+        the client-id -> (bucket, slot) map."""
+        self.spec = None
+        self.buckets: List[ClientBucket] = []
+        self._client_slot: Dict[int, Tuple[int, int]] = {}
+        for b, (spec, ids) in enumerate(buckets):
+            data_x, data_y, batches, params, opt = self._stack_clients(
+                [params_list[i] for i in ids],
+                [client_data[i] for i in ids])
+            self.buckets.append(ClientBucket(
+                spec=spec, ids=np.asarray(ids, np.int64), params=params,
+                opt=opt, batches=batches, data_x=data_x, data_y=data_y,
+                step=make_bucket_update_step(spec, self.ccfg, self.tcfg,
+                                             self.policy),
+                eval_fn=make_eval_hits(spec)))
+            for j, i in enumerate(ids):
+                self._client_slot[i] = (b, j)
+        self._relay_commit = jax.jit(make_relay_commit(self.policy))
 
     # ------------------------------------------------------------------
     def client_params(self, i: int):
         """Unstacked view of client i's params (checkpointing / inspection)."""
+        if self.hetero:
+            b, j = self._client_slot[i]
+            return jax.tree.map(lambda p: p[j], self.buckets[b].params)
         return jax.tree.map(lambda p: p[i], self.params)
 
     # ------------------------------------------------------------------
@@ -134,8 +360,9 @@ class VectorizedCollabTrainer:
         spec, ccfg, tcfg = self.spec, self.ccfg, self.tcfg
         N, mesh, policy = self.n_clients, self.mesh, self.policy
         mode = ccfg.mode
-        m_down = max(1, ccfg.m_down)
         local_update = client_lib.make_local_update_fn(spec, ccfg, tcfg)
+        teachers = make_teacher_phase(policy, ccfg)
+        uploads_of = make_upload_phase(spec, ccfg)
         # Gather/scatter the participant block ONLY when it is a strict
         # subset: with k == N the idx is a runtime arange XLA cannot elide,
         # and the full-size gather + scatter-back of params/opt/batches
@@ -159,7 +386,6 @@ class VectorizedCollabTrainer:
                 dx, dy, ids_s = data_x, data_y, ids
                 rk, uk, ok = relay_ks, upd_ks, upl_ks
                 sub_mask = mask
-            k_loc = ids_s.shape[0]
             wf = sub_mask.astype(jnp.float32)
             n_present = jnp.sum(wf)
             if mesh is not None:
@@ -169,14 +395,7 @@ class VectorizedCollabTrainer:
             keep = lambda new, old: freeze_absent(sub_mask, new, old)
 
             # phase 1 — downlink (vmapped relay sampling from the buffers)
-            if mode in ("cors", "fd"):
-                teacher = jax.vmap(
-                    lambda i, k: policy.sample_teacher(
-                        rstate, i, m_down, k))(ids_s, rk)
-            else:
-                et = client_lib.empty_teacher(ccfg)
-                teacher = jax.tree.map(
-                    lambda a: jnp.broadcast_to(a, (k_loc,) + a.shape), et)
+            teacher = teachers(rstate, ids_s, rk)
 
             # phase 2 — all local updates in one vmap (Algorithm 2 × k)
             new_p, new_o, metrics = jax.vmap(local_update)(
@@ -190,24 +409,8 @@ class VectorizedCollabTrainer:
             # dropped from the ring WITHOUT consuming slots; a round with
             # zero participants leaves the relay state untouched.
             if mode in ("cors", "fd"):
-                uploads = jax.vmap(
-                    lambda p, x, y, k: client_lib.compute_uploads(
-                        spec, p, x, y, ccfg, k))(p_s, dx, dy, ok)
-                proto = prototypes.ProtoState(
-                    jnp.sum(uploads["proto"].sum * wf[:, None, None], axis=0),
-                    jnp.sum(uploads["proto"].count * wf[:, None], axis=0))
-                logit = None
-                if mode == "fd":
-                    logit = prototypes.ProtoState(
-                        jnp.sum(uploads["logit_proto"].sum
-                                * wf[:, None, None], axis=0),
-                        jnp.sum(uploads["logit_proto"].count
-                                * wf[:, None], axis=0))
-                m_real = uploads["obs"].shape[1]     # 0 when m_up == 0
-                obs_rows = uploads["obs"].reshape(-1, *uploads["obs"].shape[2:])
-                valid_rows = jnp.repeat(uploads["valid"], m_real, axis=0)
-                owner_rows = jnp.repeat(ids_s, m_real)
-                row_mask = jnp.repeat(sub_mask, m_real)
+                proto, logit, obs_rows, valid_rows, owner_rows, row_mask = \
+                    uploads_of(p_s, dx, dy, ok, ids_s, sub_mask)
                 if mesh is not None:
                     # merge is the paper's only collective: an all-reduce of
                     # (C, d'+1) floats over the client axis
@@ -261,6 +464,8 @@ class VectorizedCollabTrainer:
 
     # ------------------------------------------------------------------
     def run_round(self) -> Dict:
+        if self.hetero:
+            return self._run_round_bucketed()
         ccfg, N = self.ccfg, self.n_clients
         mode = ccfg.mode
         # Same key schedule as the sequential oracle: keys for ALL N
@@ -292,10 +497,52 @@ class VectorizedCollabTrainer:
                         if mode == "fedavg" else 0))
         self.ledger.log_round(up, down)
 
-        accs = self.evaluate_all()
         metrics_np = jax.tree.map(np.asarray, metrics)
         metrics_all = [jax.tree.map(lambda v: float(v[i]), metrics_np)
                        for i in range(N)]
+        return self._log_round(present, up, down, metrics_all)
+
+    def _run_round_bucketed(self) -> Dict:
+        """One synchronous round across all buckets: every bucket's step
+        reads the SAME round-start relay state (downloads), then the shared
+        commit writes all uploads in bucket order and merges once."""
+        ccfg, N = self.ccfg, self.n_clients
+        mode = ccfg.mode
+        # The oracle's key schedule, indexed by ORIGINAL client id and
+        # sliced per bucket — bucketing changes execution grouping, never
+        # which randomness a client consumes.
+        self.key, relay_ks, upd_ks, upl_ks = collab.round_keys(self.key, N)
+        mask_np = np.asarray(self.schedule.mask(len(self.history), N), bool)
+        present = np.nonzero(mask_np)[0]
+        rstate0 = self.relay_state
+        payloads, metrics_parts = [], []
+        for b in self.buckets:
+            ids_j = jnp.asarray(b.ids, jnp.int32)
+            b.params, b.opt, metrics, payload = b.step(
+                b.params, b.opt, rstate0, b.batches, b.data_x, b.data_y,
+                ids_j, relay_ks[b.ids], upd_ks[b.ids], upl_ks[b.ids],
+                jnp.asarray(mask_np[b.ids]))
+            metrics_parts.append(metrics)
+            payloads.append(payload)
+
+        if mode in ("cors", "fd") and present.size:
+            self.relay_state = self._relay_commit(rstate0, tuple(payloads))
+
+        up, down = comm.round_floats(
+            mode, n_present=int(present.size), C=ccfg.num_classes,
+            d=ccfg.d_feature, m_up=ccfg.m_up, m_down=ccfg.m_down)
+        self.ledger.log_round(up, down)
+
+        metrics_all: List[Dict] = [None] * N
+        for b, metrics in zip(self.buckets, metrics_parts):
+            m_np = jax.tree.map(np.asarray, metrics)
+            for j, i in enumerate(b.ids):
+                metrics_all[int(i)] = jax.tree.map(lambda v: float(v[j]),
+                                                   m_np)
+        return self._log_round(present, up, down, metrics_all)
+
+    def _log_round(self, present, up, down, metrics_all) -> Dict:
+        accs = self.evaluate_all()
         rec = {"round": len(self.history) + 1,
                "acc_mean": float(np.mean(accs)),
                "acc_std": float(np.std(accs)),
@@ -316,12 +563,20 @@ class VectorizedCollabTrainer:
 
     # ------------------------------------------------------------------
     def evaluate_all(self, batch: int = 512) -> List[float]:
-        """Per-client test accuracy, all clients per test chunk in one call."""
+        """Per-client test accuracy, all of a bucket's clients per test
+        chunk in one call (homogeneous fleets are one bucket)."""
         n = self.test_x.shape[0]
-        correct = np.zeros((self.n_clients,), np.int64)
-        for i in range(0, n, batch):
-            lg = self._eval_batched(self.params, self.test_x[i:i + batch])
-            hits = jnp.sum(jnp.argmax(lg, -1)
-                           == self.test_y[None, i:i + batch], axis=-1)
-            correct += np.asarray(hits)
-        return (correct / n).tolist()
+
+        def stack_hits(fn, P):
+            correct = 0                          # accumulate ON device —
+            for i in range(0, n, batch):         # one sync per stack, not
+                correct = correct + fn(          # one per chunk
+                    P, self.test_x[i:i + batch], self.test_y[i:i + batch])
+            return np.asarray(correct)
+
+        if not self.hetero:
+            return (stack_hits(self._eval_hits, self.params) / n).tolist()
+        accs = np.zeros((self.n_clients,))
+        for b in self.buckets:
+            accs[b.ids] = stack_hits(b.eval_fn, b.params) / n
+        return accs.tolist()

@@ -13,7 +13,6 @@ e.g. 128/128/128: ~0.4 MB, far under the ~16 MB/core VMEM of v5e.
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp

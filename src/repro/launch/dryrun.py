@@ -13,7 +13,6 @@ Usage:
 Artifacts: artifacts/dryrun/<arch>__<shape>__<mesh>__<mode>.json
 """
 import argparse
-import dataclasses
 import json
 import time
 import traceback

@@ -9,15 +9,14 @@ B=1) the cache *sequence* axis is sharded over "data". KV heads shard over
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import sharding
-from repro.models import blocks, encdec, lm
+from repro.models import encdec, lm
 from repro.types import ModelConfig, ShapeConfig
 
 

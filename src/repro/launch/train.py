@@ -16,8 +16,7 @@ Single-pod mesh: clients=1, same code (the vmap axis is size 1).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -178,11 +177,19 @@ def make_train_step(cfg: ModelConfig, ccfg: CollabConfig, *,
 def make_round_sync(ccfg: CollabConfig):
     """Per-round prototype exchange (paper Algorithm 1 cadence): merge the
     clients' accumulated stats into the shared ProtoState. Run once per
-    round when the step was built with sync_in_step=False."""
-    def round_sync(state: TrainState, client_stats: prototypes.ProtoState):
-        merged = prototypes.ProtoState(
-            jnp.sum(client_stats.sum, axis=0),
-            jnp.sum(client_stats.count, axis=0))
+    round when the step was built with sync_in_step=False.
+
+    Accepts one stats pytree per client-architecture BUCKET (each with its
+    own leading client axis, as in core/vec_collab.py's bucketed engine):
+    the proto state is the only thing heterogeneous buckets share, so a
+    mixed fleet at LM scale is N_buckets `train_step`s + ONE round_sync
+    over all their stats. A single homogeneous stack is the 1-bucket case."""
+    def round_sync(state: TrainState,
+                   *bucket_stats: prototypes.ProtoState):
+        merged = prototypes.merge(*[
+            prototypes.ProtoState(jnp.sum(s.sum, axis=0),
+                                  jnp.sum(s.count, axis=0))
+            for s in bucket_stats])
         decay = ccfg.proto_momentum or 1.0
         return state._replace(proto=prototypes.ProtoState(
             decay * state.proto.sum + merged.sum,

@@ -8,7 +8,6 @@ f_u = τ_u ∘ φ_u: `features` returns the d'-dim last-hidden representation
 from __future__ import annotations
 
 import math
-from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -8,8 +8,6 @@ at prefill) + GELU MLP. LayerNorm, learned-style sinusoidal positions.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
-
 import jax
 import jax.numpy as jnp
 

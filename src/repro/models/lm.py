@@ -8,7 +8,7 @@ hidden states — the `d'`-dimensional representations the paper shares.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List
 
 import jax
 import jax.numpy as jnp

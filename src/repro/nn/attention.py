@@ -10,9 +10,6 @@ Layouts: x (B, S, D); q (B, S, H, hd); k/v (B, S, G, hd) with G = kv heads.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

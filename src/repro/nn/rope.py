@@ -7,8 +7,6 @@ M-RoPE coincides with standard RoPE — the property test checks this).
 """
 from __future__ import annotations
 
-from typing import Tuple
-
 import jax.numpy as jnp
 
 # M-RoPE frequency-band split across (t, h, w), in units of freq indices of

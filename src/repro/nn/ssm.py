@@ -12,9 +12,6 @@ Decode keeps (conv_state, ssm_state) in the cache and does the O(1) update.
 """
 from __future__ import annotations
 
-import math
-from typing import Tuple
-
 import jax
 import jax.numpy as jnp
 

@@ -15,7 +15,6 @@ and the reason xLSTM-125m keeps sLSTM layers sparse (1-in-6 here).
 from __future__ import annotations
 
 import math
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

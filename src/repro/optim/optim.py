@@ -7,7 +7,7 @@ Optimizer state mirrors the param pytree, so the same sharding specs apply
 from __future__ import annotations
 
 import math
-from typing import Any, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -68,7 +68,6 @@ def test_mixed_dtype_bf16():
 
 def test_gqa_decode_matches_forward_last_position():
     """Overwrite-last decode == forward with the last token replaced."""
-    from repro.nn import layers
     d, H, G, hd, S = 32, 4, 2, 8, 12
     params = attention.init_gqa(KEY, d, H, G, hd, jnp.float32)
     x = jax.random.normal(jax.random.PRNGKey(1), (2, S, d))

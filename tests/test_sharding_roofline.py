@@ -1,7 +1,4 @@
 """Sharding rules + roofline HLO parsing (pure-python units)."""
-import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 

@@ -6,7 +6,6 @@ Short-horizon integration: these verify mechanism, not paper-scale accuracy
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import baselines, client as client_lib, collab, comm
 from repro.data import partition, synthetic

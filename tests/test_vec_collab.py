@@ -101,7 +101,11 @@ def test_vectorized_shard_map_path_matches():
         np.testing.assert_allclose(rp["acc_mean"], rm["acc_mean"], atol=2e-2)
 
 
-def test_vectorized_rejects_heterogeneous_specs():
+def test_vectorized_buckets_heterogeneous_specs():
+    """Mixed-spec fleets no longer fall back to the sequential oracle: the
+    trainer groups clients into stackable buckets (one vmapped step each)
+    around the shared relay. FedAvg stays homogeneous-only, with an error
+    that says why (it averages whole weight vectors)."""
     other = client_lib.ClientSpec(
         apply=lambda p, x: cnn.apply(p, x),
         head=lambda p: (p["head_w"], p["head_b"]))
@@ -109,10 +113,20 @@ def test_vectorized_rejects_heterogeneous_specs():
     parts = partition.uniform_split(x, y, 2, seed=1)
     params = [cnn.init_cnn(k) for k in
               jax.random.split(jax.random.PRNGKey(0), 2)]
-    with pytest.raises(AssertionError):
+    tr = vec_collab.VectorizedCollabTrainer(
+        [SPEC, other], params, parts, (x, y),
+        CollabConfig(num_classes=10, d_feature=84), TrainConfig())
+    assert tr.hetero and [list(b.ids) for b in tr.buckets] == [[0], [1]]
+    with pytest.raises(ValueError, match="FedAvg.*shared architecture"):
         vec_collab.VectorizedCollabTrainer(
             [SPEC, other], params, parts, (x, y),
-            CollabConfig(num_classes=10, d_feature=84), TrainConfig())
+            CollabConfig(mode="fedavg", num_classes=10, d_feature=84),
+            TrainConfig())
+    with pytest.raises(ValueError, match="mesh"):
+        vec_collab.VectorizedCollabTrainer(
+            [SPEC, other], params, parts, (x, y),
+            CollabConfig(num_classes=10, d_feature=84), TrainConfig(),
+            mesh=sharding.client_mesh(1))
 
 
 def test_client_params_roundtrip():
