@@ -64,7 +64,8 @@ def make_trainer(mode: str, n_clients: int, *, lambda_kd: float = 10.0,
                  lambda_disc: float = 1.0, seed: int = 0, width: int = 1,
                  engine: str = "vec", batch_size: int = 32,
                  train_data=None, test_data=None, model: str = "cnn",
-                 policy=None, participation=None, hetero: str = None):
+                 policy=None, participation=None, hetero: str = None,
+                 clock=None):
     """Build a trainer without running it. engine: "vec" (default — ALL
     benchmark fleets go through the vectorized engine, homogeneous ones as
     one fused round step and mixed ones bucketed; there is no seq
@@ -75,7 +76,8 @@ def make_trainer(mode: str, n_clients: int, *, lambda_kd: float = 10.0,
     mixed-architecture fleet. policy / participation: relay-policy and
     participation-schedule specs forwarded to the trainer (see
     repro.relay.get_policy / get_schedule), e.g. policy="per_class",
-    participation="uniform_k:8"."""
+    participation="uniform_k:8". clock: a repro.sim ClockModel spec (e.g.
+    "lognormal:4") driving the asynchronous event-ordered relay."""
     if train_data is None or test_data is None:
         (x, y), test = data(seed)
     else:
@@ -104,7 +106,7 @@ def make_trainer(mode: str, n_clients: int, *, lambda_kd: float = 10.0,
     cls = (vec_collab.VectorizedCollabTrainer if engine == "vec"
            else collab.CollabTrainer)
     return cls(specs, params, parts, test, ccfg, tcfg, seed=seed,
-               policy=policy, schedule=participation)
+               policy=policy, schedule=participation, clock=clock)
 
 
 def run_mode(mode: str, n_clients: int, rounds: int = None, *,

@@ -20,6 +20,7 @@ Model choice matters for what you measure:
       [--clients 2,8,32,128] [--model mlp|cnn] [--rounds 3] \
       [--participation-sweep] [--participation-n 32] \
       [--hetero [--mix mlp:32,mlp:64] [--hetero-n 32]] \
+      [--async-sweep [--async-n 32]] \
       [--ci-gate [--out BENCH_ci.json] [--floor benchmarks/ci_floor.json]]
 
 CSV to stdout: model,n_clients,engine,s_per_round,speedup_vs_seq.
@@ -38,12 +39,20 @@ the sequential oracle stepping every client individually. Same weak-scaling
 setup; the speedup column is the mixed-fleet vec-over-seq ratio.
 CSV: mix,n_clients,n_buckets,engine,s_per_round,speedup_vs_seq.
 
+--async-sweep measures the asynchronous event-ordered relay
+(repro.relay.events + repro.sim clocks): at fixed N, a lognormal straggler
+clock with D_max in {0, 1, 4} — D_max=0 is the synchronous fast path
+(baseline), larger D_max pays for the pending-buffer commit inside the
+jitted round step. The speedup column is vec-over-seq at the SAME D_max,
+so it tracks whether the async engine keeps its vectorization win.
+CSV: model,n_clients,d_max,engine,s_per_round,speedup_vs_seq.
+
 --ci-gate is the CI benchmark-regression job (.github/workflows/ci.yml):
-run the tiny committed config from benchmarks/ci_floor.json (N=8 MLP, a few
-rounds), write the measurement to BENCH_ci.json (uploaded as a CI
-artifact), and exit 1 if the vec-over-seq per-round speedup falls below the
-committed floor. Re-baselining is documented in ci_floor.json itself and
-ROADMAP.md.
+run the tiny committed configs from benchmarks/ci_floor.json (N=8 MLP sync
+plus an async lognormal entry), write the measurements to BENCH_ci.json
+(uploaded as a CI artifact), and exit 1 if any vec-over-seq per-round
+speedup falls below its committed floor. Re-baselining is documented in
+ci_floor.json itself and ROADMAP.md.
 """
 from __future__ import annotations
 
@@ -71,14 +80,34 @@ def time_rounds(trainer, rounds: int = 3) -> float:
 
 
 def bench(n_clients: int, engine: str, model: str, rounds: int,
-          hetero: str = None, per_client: int = None) -> float:
+          hetero: str = None, per_client: int = None,
+          clock: str = None) -> float:
     pc = per_client or PER_CLIENT
     train = synthetic.class_images(pc * n_clients, seed=0, noise=0.8)
     test = synthetic.class_images(N_TEST, seed=99, noise=0.8)
     tr = common.make_trainer("cors", n_clients, engine=engine, model=model,
                              batch_size=16, train_data=train, test_data=test,
-                             hetero=hetero)
+                             hetero=hetero, clock=clock)
     return time_rounds(tr, rounds)
+
+
+def async_sweep(n_clients: int = 32, rounds: int = 3, model: str = "mlp"):
+    """Bounded-delay relay cost: vec vs seq per round at D_max in
+    {0, 1, 4} under a lognormal straggler clock. D_max=0 routes to the
+    synchronous fast path; D_max>0 runs the full-width async step with the
+    (N, D_max, ...) pending buffer, so the column shows what event-ordered
+    lateness costs and whether the vectorization win survives it."""
+    print("model,n_clients,d_max,engine,s_per_round,speedup_vs_seq")
+    results = {}
+    for d_max in (0, 1, 4):
+        clock = None if d_max == 0 else f"lognormal:{d_max}"
+        t_vec = bench(n_clients, "vec", model, rounds, clock=clock)
+        t_seq = bench(n_clients, "seq", model, rounds, clock=clock)
+        results[d_max] = t_seq / t_vec
+        print(f"{model},{n_clients},{d_max},seq,{t_seq:.4f},1.00")
+        print(f"{model},{n_clients},{d_max},vec,{t_vec:.4f},"
+              f"{results[d_max]:.2f}")
+    return results
 
 
 def hetero_sweep(n_clients: int = 32, rounds: int = 3,
@@ -104,34 +133,46 @@ def hetero_sweep(n_clients: int = 32, rounds: int = 3,
 
 def ci_gate(out: str = "BENCH_ci.json",
             floor_path: str = "benchmarks/ci_floor.json") -> int:
-    """The CI benchmark-regression gate. Measures the committed tiny config
-    and fails (exit 1) when vec-over-seq drops below the committed floor."""
+    """The CI benchmark-regression gate. Measures every committed tiny
+    config (the synchronous top-level entry plus any named extra entries,
+    e.g. "async") and fails (exit 1) when any vec-over-seq speedup drops
+    below its committed floor."""
     with open(floor_path) as f:
         floor = json.load(f)
-    cfg = floor["config"]
-    t_vec = bench(cfg["n_clients"], "vec", cfg["model"], cfg["rounds"],
-                  per_client=cfg["per_client"])
-    t_seq = bench(cfg["n_clients"], "seq", cfg["model"], cfg["rounds"],
-                  per_client=cfg["per_client"])
-    speedup = t_seq / t_vec
-    min_speedup = floor["min_speedup_vec_over_seq"]
-    result = {"config": cfg, "s_per_round_seq": t_seq,
-              "s_per_round_vec": t_vec, "speedup_vec_over_seq": speedup,
-              "min_speedup_vec_over_seq": min_speedup,
-              "passed": speedup >= min_speedup}
+    entries = [("sync", floor)] + [
+        (name, floor[name]) for name in ("async",) if name in floor]
+    result, failed = {}, []
+    for name, entry in entries:
+        cfg = entry["config"]
+        clock = cfg.get("clock")
+        t_vec = bench(cfg["n_clients"], "vec", cfg["model"], cfg["rounds"],
+                      per_client=cfg["per_client"], clock=clock)
+        t_seq = bench(cfg["n_clients"], "seq", cfg["model"], cfg["rounds"],
+                      per_client=cfg["per_client"], clock=clock)
+        speedup = t_seq / t_vec
+        min_speedup = entry["min_speedup_vec_over_seq"]
+        ok = speedup >= min_speedup
+        result[name] = {"config": cfg, "s_per_round_seq": t_seq,
+                        "s_per_round_vec": t_vec,
+                        "speedup_vec_over_seq": speedup,
+                        "min_speedup_vec_over_seq": min_speedup,
+                        "passed": ok}
+        print(f"ci-gate[{name}]: vec {t_vec:.4f}s/round, seq "
+              f"{t_seq:.4f}s/round -> {speedup:.2f}x (floor "
+              f"{min_speedup}x) [{'PASS' if ok else 'FAIL'}]")
+        if not ok:
+            failed.append((name, speedup, min_speedup))
+    result["passed"] = not failed
     with open(out, "w") as f:
         json.dump(result, f, indent=2)
-    print(f"ci-gate: vec {t_vec:.4f}s/round, seq {t_seq:.4f}s/round -> "
-          f"{speedup:.2f}x (floor {min_speedup}x) "
-          f"[{'PASS' if result['passed'] else 'FAIL'}] -> {out}")
-    if not result["passed"]:
-        print(f"ci-gate: FAIL — vec-over-seq speedup {speedup:.2f}x is "
-              f"below the committed floor {min_speedup}x ({floor_path}). "
-              "Either a perf regression in the vectorized engine, or the "
-              "floor needs re-baselining (see that file).",
-              file=sys.stderr)
-        return 1
-    return 0
+    print(f"ci-gate: {'PASS' if not failed else 'FAIL'} -> {out}")
+    for name, speedup, min_speedup in failed:
+        print(f"ci-gate: FAIL[{name}] — vec-over-seq speedup "
+              f"{speedup:.2f}x is below the committed floor "
+              f"{min_speedup}x ({floor_path}). Either a perf regression "
+              "in the vectorized engine, or the floor needs re-baselining "
+              "(see that file).", file=sys.stderr)
+    return 1 if failed else 0
 
 
 def participation_sweep(n_clients: int = 32, rounds: int = 3,
@@ -194,6 +235,12 @@ if __name__ == "__main__":
                          "mlp:32,mlp:64 or mlp:64,mlp:96,cnn:1")
     ap.add_argument("--hetero-n", type=int, default=32,
                     help="N for the hetero sweep")
+    ap.add_argument("--async-sweep", action="store_true",
+                    help="measure the asynchronous event-ordered relay "
+                         "(lognormal straggler clock, D_max in {0,1,4}) "
+                         "vec vs seq")
+    ap.add_argument("--async-n", type=int, default=32,
+                    help="N for the async sweep")
     ap.add_argument("--ci-gate", action="store_true",
                     help="run the CI benchmark-regression gate (config + "
                          "floor from --floor; exit 1 below the floor)")
@@ -204,6 +251,8 @@ if __name__ == "__main__":
     args = ap.parse_args()
     if args.ci_gate:
         sys.exit(ci_gate(args.out, args.floor))
+    elif args.async_sweep:
+        async_sweep(args.async_n, args.rounds, args.model)
     elif args.hetero:
         hetero_sweep(args.hetero_n, args.rounds, args.mix)
     elif args.participation_sweep:

@@ -37,8 +37,17 @@ def main():
                          "staleness[:lam] (see src/repro/relay/README.md)")
     ap.add_argument("--participation", default="full",
                     help="per-round client participation schedule: full | "
-                         "uniform_k:K | cyclic:K | bernoulli:P "
-                         "(e.g. uniform_k:2 = 2 random clients per round)")
+                         "uniform_k:K | cyclic:K | bernoulli:P | "
+                         "adaptive:P[,BOOST] (adaptive boosts observed "
+                         "stragglers; e.g. uniform_k:2 = 2 random clients "
+                         "per round)")
+    ap.add_argument("--clock-model", default="none",
+                    help="virtual-time client clock driving the async "
+                         "event-ordered relay (repro.sim): none | "
+                         "homogeneous[:delay] | lognormal[:dmax[,sigma]] | "
+                         "periodic[:dmax[,period]] — e.g. lognormal:4 is a "
+                         "straggler fleet whose uploads commit up to 4 "
+                         "rounds late, in event order")
     ap.add_argument("--out", default="artifacts/collab_ckpt")
     args = ap.parse_args()
 
@@ -47,7 +56,7 @@ def main():
     parts = partition.uniform_split(x, y, args.clients, seed=1)
     print(f"{args.clients} clients × {len(parts[0][0])} samples each, "
           f"mode={args.mode}, relay={args.relay_policy}, "
-          f"participation={args.participation}"
+          f"participation={args.participation}, clock={args.clock_model}"
           + (", hetero cnn/mlp fleet" if args.hetero else ""))
 
     cnn_spec = client_lib.ClientSpec(
@@ -72,8 +81,14 @@ def main():
            else collab.CollabTrainer)
     trainer = cls(specs, params, parts,
                   (tx, ty), ccfg, TrainConfig(batch_size=32), seed=0,
-                  policy=args.relay_policy, schedule=args.participation)
+                  policy=args.relay_policy, schedule=args.participation,
+                  clock=args.clock_model)
     trainer.run(args.rounds, log_every=max(1, args.rounds // 15))
+    late = sum(1 for h in trainer.history
+               for b, _ in h.get("commits", []) if b < h["round"] - 1)
+    if late:
+        print(f"async relay: {late} uploads committed late "
+              f"(event-ordered, see src/repro/relay/events.py)")
 
     os.makedirs(args.out, exist_ok=True)
     for i in range(args.clients):

@@ -25,10 +25,24 @@ key schedule is indexed by client id, so ordering changes nothing else.
 
 Server behavior is pluggable via `policy` (a repro.relay RelayPolicy spec:
 "flat" | "per_class" | "staleness") and `schedule` (a participation
-schedule: "full" | "uniform_k:K" | "cyclic:K" | "bernoulli:P"); absent
-clients are skipped entirely — no download, no update, no upload, no comm
-billed — which is the reference semantics the vectorized engine's masked
-client axis is tested against (tests/test_relay_policies.py).
+schedule: "full" | "uniform_k:K" | "cyclic:K" | "bernoulli:P" |
+"adaptive:P[,BOOST]"); absent clients are skipped entirely — no download,
+no update, no upload, no comm billed — which is the reference semantics
+the vectorized engine's masked client axis is tested against
+(tests/test_relay_policies.py).
+
+Asynchrony: pass `clock` (a repro.sim ClockModel spec, e.g.
+"lognormal:4") and uploads commit LATE — a round-r upload with commit
+delay d is parked in the event queue and appended in round r+d, in event
+order (birth round, then upload position; see relay/events.py). This
+trainer is the EVENT-REPLAY ORACLE: it replays the identical commit order
+the vectorized engine's pending buffer produces, one host-side event at a
+time, and therefore stays the bit-exact ring/stamp bookkeeping reference
+under any clock model. A client's teachers always come from the committed
+state at its sync (round start) — in-flight uploads are invisible, which
+is exactly what distinguishes the relay from SplitFed's synchronous
+server. `clock=None` (or D_max=0) is today's synchronous behavior,
+bit-identical.
 """
 from __future__ import annotations
 
@@ -39,9 +53,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import relay as relay_lib
+from repro import relay as relay_lib, sim
 from repro.core import baselines, client as client_lib, comm
 from repro.optim import adam_init
+from repro.relay import events
 from repro.types import CollabConfig, TrainConfig
 
 
@@ -70,7 +85,7 @@ class CollabTrainer:
                  client_data: Sequence[Tuple[jax.Array, jax.Array]],
                  test_data: Tuple[jax.Array, jax.Array],
                  ccfg: CollabConfig, tcfg: TrainConfig, seed: int = 0,
-                 policy=None, schedule=None):
+                 policy=None, schedule=None, clock=None):
         assert len(specs) == len(params_list) == len(client_data)
         self.ccfg, self.tcfg = ccfg, tcfg
         self.clients = [
@@ -84,8 +99,11 @@ class CollabTrainer:
         self._upload_order = [
             i for _, ids in client_lib.bucketize(specs, params_list)
             for i in ids]
+        self.clock = sim.get_clock(clock, seed=seed)
+        self._queue = events.HostEventQueue()
         self.policy = relay_lib.get_policy(policy)
-        self.schedule = relay_lib.get_schedule(schedule, seed=seed)
+        self.schedule = relay_lib.get_schedule(schedule, seed=seed,
+                                               clock=self.clock)
         self.server = relay_lib.RelayServer(ccfg, ccfg.d_feature, seed,
                                             n_clients=len(specs),
                                             policy=self.policy)
@@ -117,9 +135,12 @@ class CollabTrainer:
         # present clients consume the same per-client keys under every
         # schedule (and as in the vectorized engine); absent clients simply
         # never use theirs.
+        r = len(self.history)
         self.key, relay_ks, upd_ks, upl_ks = round_keys(self.key, N)
-        mask = np.asarray(self.schedule.mask(len(self.history), N), bool)
+        mask = np.asarray(self.schedule.mask(r, N), bool)
         present = np.nonzero(mask)[0]
+        delays = (self.clock.delays(r, N) if self.clock is not None
+                  else np.zeros((N,), np.int64))
 
         # phase 1 — downlink: every PRESENT client sees last round's state
         teachers: Dict[int, Dict] = {}
@@ -139,18 +160,33 @@ class CollabTrainer:
                 upd_ks[i])
             metrics_all[i] = jax.tree.map(float, m)
 
-        # phase 3 — uplink + server merge (Algorithm 1), present clients
-        # only; a zero-participant round leaves the relay state untouched
+        # phase 3 — uplink + server merge (Algorithm 1). Present clients'
+        # fresh uploads enter the event queue with their clock-model commit
+        # delay; the relay then commits round r's DUE events in event order
+        # (birth round, upload position — relay/events.py), each stamped
+        # with its birth clock. With no clock (or D_max=0) every upload is
+        # due at birth and this replays today's synchronous upload loop
+        # bit-for-bit. A round with zero commits leaves the relay state
+        # untouched (no merge, no clock tick).
+        commits: List[Tuple[int, int]] = [(r, int(i)) for i in present]
         if mode in ("cors", "fd"):
-            self.server.begin_round()
-            for i in self._upload_order:
+            birth_clock = int(self.server.state.clock)
+            for pos, i in enumerate(self._upload_order):
                 if not mask[i]:
                     continue
                 c = self.clients[i]
                 payload = self._upload_fn(c.spec)(c.params, c.data_x,
                                                   c.data_y, upl_ks[i])
-                self.server.upload(i, payload)
-            self.server.end_round()
+                self._queue.push(birth=r, pos=pos, client_id=i,
+                                 stamp=birth_clock, payload=payload,
+                                 delay=int(delays[i]))
+            due = self._queue.pop_due(r)
+            self.server.begin_round()
+            for birth, pos, cid, stamp, payload, _ in due:
+                self.server.upload(cid, payload, stamp=stamp)
+            if due:
+                self.server.end_round()
+            commits = [(birth, cid) for birth, pos, cid, *_ in due]
 
         if mode == "fedavg" and len(present):
             avg = baselines.fedavg_aggregate(
@@ -158,7 +194,8 @@ class CollabTrainer:
             for i in present:
                 self.clients[i].params = avg
         up, down = comm.round_floats(
-            mode, n_present=len(present), C=ccfg.num_classes,
+            mode, n_present=len(present), n_commit=len(commits),
+            C=ccfg.num_classes,
             d=ccfg.d_feature, m_up=ccfg.m_up, m_down=ccfg.m_down,
             model_size=(baselines.num_params(self.clients[0].params)
                         if mode == "fedavg" else 0))
@@ -171,6 +208,7 @@ class CollabTrainer:
                "accs": accs,
                "metrics": metrics_all,
                "participants": present.tolist(),
+               "commits": [[b, c] for b, c in commits],
                "comm_up": up, "comm_down": down}
         self.history.append(rec)
         return rec

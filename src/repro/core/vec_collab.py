@@ -57,6 +57,19 @@ the bit-exact reference for ring bookkeeping under any bucket mix
 (tests/test_hetero_bucketed.py). The mesh path and static-k compaction
 remain homogeneous-only: bucket participant counts vary per round even
 under fixed-k schedules, and per-bucket stacks have different shapes.
+
+Asynchrony: pass `clock` (a repro.sim ClockModel spec) and uploads commit
+LATE through the event-ordered relay log (repro.relay.events): a round-r
+upload with commit delay d <= D_max parks in a fixed-shape pending buffer
+(N, D_max, ...) and is appended — in event order, stamped with its birth
+clock — in round r+d, all inside ONE jitted async round step (homogeneous)
+or the shared jitted async commit (bucketed). Teachers are always sampled
+from the round-start COMMITTED state (the client's last sync; in-flight
+uploads are invisible). The commit set decouples from the participant set,
+so the async path runs full-width and off-mesh; `D_max = 0` keeps today's
+synchronous fast paths bit-identically. The sequential oracle replays the
+identical event order host-side and stays the bit-exact reference
+(tests/test_async_relay.py).
 """
 from __future__ import annotations
 
@@ -67,7 +80,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import relay as relay_lib, sharding
+from repro import relay as relay_lib, sharding, sim
 from repro.core import baselines, client as client_lib, collab, comm, \
     prototypes
 from repro.optim import adam_init
@@ -104,33 +117,56 @@ def make_teacher_phase(policy: relay_lib.RelayPolicy, ccfg: CollabConfig):
     return teachers
 
 
-def make_upload_phase(spec: client_lib.ClientSpec, ccfg: CollabConfig):
-    """Phase 3a (uplink, compute side): vmapped `compute_uploads` flattened
-    into relay-ready pieces. Returns `uploads_of(params, data_x, data_y,
-    upl_ks, ids, mask) -> (proto, logit|None, obs_rows, valid_rows,
-    owner_rows, row_mask)` where absent clients' prototype sums are
-    zero-weighted and their observation rows masked out (dropped by the
-    relay append WITHOUT consuming ring slots)."""
+def make_client_upload_phase(spec: client_lib.ClientSpec,
+                             ccfg: CollabConfig):
+    """Phase 3a, per-client form: vmapped `compute_uploads` with NO
+    cross-client reduction — the pieces the async event log parks and
+    commits per upload (relay/events.py). Returns `uploads_of(params,
+    data_x, data_y, upl_ks, ids) -> dict(obs (k, m, C, d'), valid (k, C),
+    psum (k, C, d'), pcnt (k, C), [lsum (k, C, C), lcnt (k, C) in FD
+    mode], owner (k,) int32)`."""
     mode = ccfg.mode
 
-    def uploads_of(p_s, dx, dy, upl_ks, ids_s, sub_mask):
-        wf = sub_mask.astype(jnp.float32)
+    def uploads_of(p_s, dx, dy, upl_ks, ids_s):
         uploads = jax.vmap(
             lambda p, x, y, k: client_lib.compute_uploads(
                 spec, p, x, y, ccfg, k))(p_s, dx, dy, upl_ks)
+        out = {"obs": uploads["obs"], "valid": uploads["valid"],
+               "psum": uploads["proto"].sum,
+               "pcnt": uploads["proto"].count,
+               "owner": ids_s.astype(jnp.int32)}
+        if mode == "fd":
+            out["lsum"] = uploads["logit_proto"].sum
+            out["lcnt"] = uploads["logit_proto"].count
+        return out
+
+    return uploads_of
+
+
+def make_upload_phase(spec: client_lib.ClientSpec, ccfg: CollabConfig):
+    """Phase 3a (uplink, compute side): the per-client pieces reduced into
+    relay-ready synchronous-append form. Returns `uploads_of(params,
+    data_x, data_y, upl_ks, ids, mask) -> (proto, logit|None, obs_rows,
+    valid_rows, owner_rows, row_mask)` where absent clients' prototype
+    sums are zero-weighted and their observation rows masked out (dropped
+    by the relay append WITHOUT consuming ring slots)."""
+    mode = ccfg.mode
+    per_client = make_client_upload_phase(spec, ccfg)
+
+    def uploads_of(p_s, dx, dy, upl_ks, ids_s, sub_mask):
+        wf = sub_mask.astype(jnp.float32)
+        u = per_client(p_s, dx, dy, upl_ks, ids_s)
         proto = prototypes.ProtoState(
-            jnp.sum(uploads["proto"].sum * wf[:, None, None], axis=0),
-            jnp.sum(uploads["proto"].count * wf[:, None], axis=0))
+            jnp.sum(u["psum"] * wf[:, None, None], axis=0),
+            jnp.sum(u["pcnt"] * wf[:, None], axis=0))
         logit = None
         if mode == "fd":
             logit = prototypes.ProtoState(
-                jnp.sum(uploads["logit_proto"].sum
-                        * wf[:, None, None], axis=0),
-                jnp.sum(uploads["logit_proto"].count
-                        * wf[:, None], axis=0))
-        m_real = uploads["obs"].shape[1]     # 0 when m_up == 0
-        obs_rows = uploads["obs"].reshape(-1, *uploads["obs"].shape[2:])
-        valid_rows = jnp.repeat(uploads["valid"], m_real, axis=0)
+                jnp.sum(u["lsum"] * wf[:, None, None], axis=0),
+                jnp.sum(u["lcnt"] * wf[:, None], axis=0))
+        m_real = u["obs"].shape[1]           # 0 when m_up == 0
+        obs_rows = u["obs"].reshape(-1, *u["obs"].shape[2:])
+        valid_rows = jnp.repeat(u["valid"], m_real, axis=0)
         owner_rows = jnp.repeat(ids_s, m_real)
         row_mask = jnp.repeat(sub_mask, m_real)
         return proto, logit, obs_rows, valid_rows, owner_rows, row_mask
@@ -160,14 +196,74 @@ def make_relay_commit(policy: relay_lib.RelayPolicy):
     return commit
 
 
+def make_async_round_step(spec: client_lib.ClientSpec, ccfg: CollabConfig,
+                          tcfg: TrainConfig, policy: relay_lib.RelayPolicy):
+    """The homogeneous ASYNC round step (bounded-delay uploads,
+    relay/events.py): phases 1-2 exactly as the synchronous step, then ONE
+    `events.commit_and_park` — commit every due event (pending uploads
+    whose clock says "now" + this round's delay-0 uploads) in event order,
+    park the rest. Full-width only: lateness decouples who trains from
+    whose upload commits, so the static-k participant gather does not
+    cover the commit set. `round_idx` and `delays` are traced arguments —
+    one compile, ever.
+
+    Returns a jitted `step(params, opt, rstate, pending, batches, data_x,
+    data_y, ids, relay_ks, upd_ks, upl_ks, mask, delays, round_idx) ->
+    (params, opt, rstate, pending, metrics)`."""
+    mode = ccfg.mode
+    assert mode in ("cors", "fd"), mode
+    local_update = client_lib.make_local_update_fn(spec, ccfg, tcfg)
+    teachers = make_teacher_phase(policy, ccfg)
+    per_client = make_client_upload_phase(spec, ccfg)
+
+    def step(params, opt, rstate, pending, batches, data_x, data_y, ids,
+             relay_ks, upd_ks, upl_ks, mask, delays, round_idx):
+        # phases 1-2 — downlink from the round-start COMMITTED state (the
+        # client's last sync: in-flight uploads are invisible) + local
+        # updates; absent clients freeze
+        teacher = teachers(rstate, ids, relay_ks)
+        new_p, new_o, metrics = jax.vmap(local_update)(
+            params, opt, batches, teacher, upd_ks)
+        p_s = freeze_absent(mask, new_p, params)
+        o_s = freeze_absent(mask, new_o, opt)
+        metrics = jax.tree.map(
+            lambda m: jnp.where(_bcast(mask, m), m, 0.0), metrics)
+        # phase 3 — the event log's single relay write
+        fresh = per_client(p_s, data_x, data_y, upl_ks, ids)
+        rstate, pending = relay_lib.events.commit_and_park(
+            policy, rstate, pending, fresh, round_idx, delays, mask)
+        return p_s, o_s, rstate, pending, metrics
+
+    return jax.jit(step)
+
+
+def make_async_relay_commit(policy: relay_lib.RelayPolicy):
+    """Heterogeneous counterpart of `make_relay_commit` for the async
+    engine: concatenate the buckets' PER-CLIENT payloads in bucket (=
+    upload/event) order and run ONE `events.commit_and_park`. `delays` and
+    `mask` arrive permuted to upload order, matching the concatenation and
+    the pending buffer's upload-position indexing."""
+
+    def commit(rstate, pending, payloads, round_idx, delays, mask):
+        keys = [k for k in payloads[0] if payloads[0][k] is not None]
+        fresh = {k: jnp.concatenate([p[k] for p in payloads]) for k in keys}
+        return relay_lib.events.commit_and_park(
+            policy, rstate, pending, fresh, round_idx, delays, mask)
+
+    return commit
+
+
 def make_bucket_update_step(spec: client_lib.ClientSpec, ccfg: CollabConfig,
                             tcfg: TrainConfig,
-                            policy: relay_lib.RelayPolicy):
+                            policy: relay_lib.RelayPolicy,
+                            per_client_payload: bool = False):
     """One bucket's full-width masked round step against a FIXED relay
     state: downlink + local updates + upload payloads (phases 1-3a). The
     relay write (3b) is deliberately NOT here — the bucketed engine lets
     every bucket read the same round-start state and then commits all
-    buckets' uploads in bucket order via `make_relay_commit`.
+    buckets' uploads in bucket order via `make_relay_commit` (synchronous)
+    or `make_async_relay_commit` (bounded-delay event log, which needs the
+    UNREDUCED per-client pieces — `per_client_payload=True`).
 
     Returns a jitted `step(params, opt, rstate, batches, data_x, data_y,
     ids, relay_ks, upd_ks, upl_ks, mask) -> (params, opt, metrics,
@@ -178,6 +274,7 @@ def make_bucket_update_step(spec: client_lib.ClientSpec, ccfg: CollabConfig,
     local_update = client_lib.make_local_update_fn(spec, ccfg, tcfg)
     teachers = make_teacher_phase(policy, ccfg)
     uploads_of = make_upload_phase(spec, ccfg)
+    uploads_per_client = make_client_upload_phase(spec, ccfg)
 
     def step(params, opt, rstate, batches, data_x, data_y, ids,
              relay_ks, upd_ks, upl_ks, mask):
@@ -190,11 +287,15 @@ def make_bucket_update_step(spec: client_lib.ClientSpec, ccfg: CollabConfig,
             lambda m: jnp.where(_bcast(mask, m), m, 0.0), metrics)
         payload = None
         if mode in ("cors", "fd"):
-            proto, logit, obs_rows, valid_rows, owner_rows, row_mask = \
-                uploads_of(p_s, data_x, data_y, upl_ks, ids, mask)
-            payload = {"proto": proto, "logit": logit, "obs_rows": obs_rows,
-                       "valid_rows": valid_rows, "owner_rows": owner_rows,
-                       "row_mask": row_mask}
+            if per_client_payload:
+                payload = uploads_per_client(p_s, data_x, data_y, upl_ks,
+                                             ids)
+            else:
+                proto, logit, obs_rows, valid_rows, owner_rows, row_mask = \
+                    uploads_of(p_s, data_x, data_y, upl_ks, ids, mask)
+                payload = {"proto": proto, "logit": logit,
+                           "obs_rows": obs_rows, "valid_rows": valid_rows,
+                           "owner_rows": owner_rows, "row_mask": row_mask}
         return p_s, o_s, metrics, payload
 
     return jax.jit(step)
@@ -251,7 +352,7 @@ class VectorizedCollabTrainer:
                  client_data: Sequence[Tuple[jax.Array, jax.Array]],
                  test_data: Tuple[jax.Array, jax.Array],
                  ccfg: CollabConfig, tcfg: TrainConfig, seed: int = 0,
-                 mesh=None, policy=None, schedule=None):
+                 mesh=None, policy=None, schedule=None, clock=None):
         if isinstance(specs, client_lib.ClientSpec):
             specs = [specs] * len(params_list)
         assert len(specs) == len(params_list) == len(client_data)
@@ -259,7 +360,22 @@ class VectorizedCollabTrainer:
         self.n_clients = N = len(params_list)
         self.mesh = mesh
         self.policy = relay_lib.get_policy(policy)
-        self.schedule = relay_lib.get_schedule(schedule, seed=seed)
+        self.clock = sim.get_clock(clock, seed=seed)
+        self.schedule = relay_lib.get_schedule(schedule, seed=seed,
+                                               clock=self.clock)
+        # Asynchrony (bounded-delay uploads, relay/events.py) only touches
+        # relay commits, so only relay modes run the async path; a D_max=0
+        # clock IS the synchronous fleet and keeps today's fast paths
+        # (static-k compaction, mesh).
+        self._async = (self.clock is not None and self.clock.d_max > 0
+                       and ccfg.mode in ("cors", "fd"))
+        if self._async and mesh is not None:
+            raise ValueError(
+                "the shard_map mesh path is synchronous: committing a "
+                "cross-device pending buffer in event order needs an "
+                f"all-gather redesign (ROADMAP). Got d_max="
+                f"{self.clock.d_max}; run async fleets off-mesh "
+                "(mesh=None) or use a D_max=0 clock.")
         buckets = client_lib.bucketize(specs, params_list)
         self.bucket_ids: List[List[int]] = [ids for _, ids in buckets]
         self.hetero = len(buckets) > 1
@@ -287,6 +403,15 @@ class VectorizedCollabTrainer:
         self.ledger = comm.CommLedger()
         self.key = jax.random.PRNGKey(seed)
         self.history: List[Dict] = []
+        # Relay-write (= event) order: upload position u -> client id.
+        # Bucket by bucket, client-id order within — identity for
+        # homogeneous fleets. The pending buffer is indexed by u.
+        self._upload_order = [i for _, ids in buckets for i in ids]
+        if self._async:
+            self.pending = relay_lib.events.init_pending(
+                N, self.clock.d_max, ccfg.m_up, ccfg.num_classes,
+                ccfg.d_feature, fd=(ccfg.mode == "fd"))
+            self._commit_mirror = relay_lib.events.CommitMirror()
 
         if self.hetero:
             self._init_bucketed(buckets, params_list, client_data)
@@ -298,12 +423,18 @@ class VectorizedCollabTrainer:
             = self._stack_clients(params_list, client_data)
 
         # Compaction: only off-mesh (gathering an arbitrary client subset
-        # across a sharded axis would defeat shard_map's static layout) and
-        # only when the schedule's per-round count is static.
+        # across a sharded axis would defeat shard_map's static layout),
+        # only when the schedule's per-round count is static, and only
+        # synchronously (lateness decouples who trains from whose upload
+        # commits, so the participant gather does not cover the commit
+        # set — the async step runs full-width).
         fixed_k = self.schedule.fixed_k
-        self._k_active = (fixed_k if (mesh is None and fixed_k is not None)
+        self._k_active = (fixed_k if (mesh is None and fixed_k is not None
+                                      and not self._async)
                           else N)
-        self._round_step = self._make_round_step()
+        self._round_step = (
+            make_async_round_step(self.spec, ccfg, tcfg, self.policy)
+            if self._async else self._make_round_step())
         self._eval_hits = make_eval_hits(self.spec)
 
     # ------------------------------------------------------------------
@@ -340,12 +471,15 @@ class VectorizedCollabTrainer:
             self.buckets.append(ClientBucket(
                 spec=spec, ids=np.asarray(ids, np.int64), params=params,
                 opt=opt, batches=batches, data_x=data_x, data_y=data_y,
-                step=make_bucket_update_step(spec, self.ccfg, self.tcfg,
-                                             self.policy),
+                step=make_bucket_update_step(
+                    spec, self.ccfg, self.tcfg, self.policy,
+                    per_client_payload=self._async),
                 eval_fn=make_eval_hits(spec)))
             for j, i in enumerate(ids):
                 self._client_slot[i] = (b, j)
-        self._relay_commit = jax.jit(make_relay_commit(self.policy))
+        self._relay_commit = jax.jit(
+            make_async_relay_commit(self.policy) if self._async
+            else make_relay_commit(self.policy))
 
     # ------------------------------------------------------------------
     def client_params(self, i: int):
@@ -463,35 +597,65 @@ class VectorizedCollabTrainer:
         return jax.jit(mapped)
 
     # ------------------------------------------------------------------
+    def _round_commits(self, r: int, mask_np, delays_np):
+        """The round's commit list [(birth, client), ...] — event order,
+        identical to the sequential oracle's replay (host-side mirror of
+        the device pending buffer for records and comm billing)."""
+        mode = self.ccfg.mode
+        if mode not in ("cors", "fd"):
+            return [(r, int(i)) for i in np.nonzero(mask_np)[0]]
+        if self._async:
+            return self._commit_mirror.step(r, mask_np, delays_np,
+                                            self._upload_order)
+        return [(r, int(i)) for i in self._upload_order if mask_np[i]]
+
     def run_round(self) -> Dict:
         if self.hetero:
             return self._run_round_bucketed()
         ccfg, N = self.ccfg, self.n_clients
         mode = ccfg.mode
+        r = len(self.history)
         # Same key schedule as the sequential oracle: keys for ALL N
         # clients regardless of participation (absent clients just never
         # consume theirs), so seq and vec stay equivalence-testable under
         # every schedule.
         self.key, relay_ks, upd_ks, upl_ks = collab.round_keys(self.key, N)
         ids = jnp.arange(N, dtype=jnp.int32)
-        mask_np = np.asarray(self.schedule.mask(len(self.history), N), bool)
+        mask_np = np.asarray(self.schedule.mask(r, N), bool)
         present = np.nonzero(mask_np)[0]
-        if self.mesh is None and self._k_active < N:
-            idx_np = present                     # static-k compaction
-            assert idx_np.size == self._k_active, (
-                "schedule emitted a mask inconsistent with its fixed_k",
-                idx_np.size, self._k_active)
-        else:
-            idx_np = np.arange(N)
+        delays_np = (self.clock.delays(r, N) if self.clock is not None
+                     else np.zeros((N,), np.int64))
+        commits = self._round_commits(r, mask_np, delays_np)
         mask = jnp.asarray(mask_np)
-        idx = jnp.asarray(idx_np, jnp.int32)
-        self.params, self.opt_state, self.relay_state, metrics = \
-            self._round_step(self.params, self.opt_state, self.relay_state,
-                             self.batches, self.data_x, self.data_y, ids,
-                             relay_ks, upd_ks, upl_ks, mask, idx)
+        if self._async:
+            # Full-width async step: round_idx/delays are traced, so the
+            # event timeline never retraces; the pending buffer threads
+            # through like the relay state.
+            (self.params, self.opt_state, self.relay_state, self.pending,
+             metrics) = self._round_step(
+                self.params, self.opt_state, self.relay_state, self.pending,
+                self.batches, self.data_x, self.data_y, ids,
+                relay_ks, upd_ks, upl_ks, mask,
+                jnp.asarray(delays_np, jnp.int32),
+                jnp.asarray(r, jnp.int32))
+        else:
+            if self.mesh is None and self._k_active < N:
+                idx_np = present                 # static-k compaction
+                assert idx_np.size == self._k_active, (
+                    "schedule emitted a mask inconsistent with its fixed_k",
+                    idx_np.size, self._k_active)
+            else:
+                idx_np = np.arange(N)
+            idx = jnp.asarray(idx_np, jnp.int32)
+            self.params, self.opt_state, self.relay_state, metrics = \
+                self._round_step(self.params, self.opt_state,
+                                 self.relay_state,
+                                 self.batches, self.data_x, self.data_y,
+                                 ids, relay_ks, upd_ks, upl_ks, mask, idx)
 
         up, down = comm.round_floats(
-            mode, n_present=int(present.size), C=ccfg.num_classes,
+            mode, n_present=int(present.size), n_commit=len(commits),
+            C=ccfg.num_classes,
             d=ccfg.d_feature, m_up=ccfg.m_up, m_down=ccfg.m_down,
             model_size=(baselines.num_params(self.client_params(0))
                         if mode == "fedavg" else 0))
@@ -500,7 +664,7 @@ class VectorizedCollabTrainer:
         metrics_np = jax.tree.map(np.asarray, metrics)
         metrics_all = [jax.tree.map(lambda v: float(v[i]), metrics_np)
                        for i in range(N)]
-        return self._log_round(present, up, down, metrics_all)
+        return self._log_round(present, up, down, metrics_all, commits)
 
     def _run_round_bucketed(self) -> Dict:
         """One synchronous round across all buckets: every bucket's step
@@ -508,12 +672,16 @@ class VectorizedCollabTrainer:
         commit writes all uploads in bucket order and merges once."""
         ccfg, N = self.ccfg, self.n_clients
         mode = ccfg.mode
+        r = len(self.history)
         # The oracle's key schedule, indexed by ORIGINAL client id and
         # sliced per bucket — bucketing changes execution grouping, never
         # which randomness a client consumes.
         self.key, relay_ks, upd_ks, upl_ks = collab.round_keys(self.key, N)
-        mask_np = np.asarray(self.schedule.mask(len(self.history), N), bool)
+        mask_np = np.asarray(self.schedule.mask(r, N), bool)
         present = np.nonzero(mask_np)[0]
+        delays_np = (self.clock.delays(r, N) if self.clock is not None
+                     else np.zeros((N,), np.int64))
+        commits = self._round_commits(r, mask_np, delays_np)
         rstate0 = self.relay_state
         payloads, metrics_parts = [], []
         for b in self.buckets:
@@ -525,11 +693,23 @@ class VectorizedCollabTrainer:
             metrics_parts.append(metrics)
             payloads.append(payload)
 
-        if mode in ("cors", "fd") and present.size:
+        if self._async:
+            # The shared commit runs EVERY round: pending uploads can be
+            # due even when nobody trains (and it no-ops when the commit
+            # set is empty). mask/delays permuted to upload order, like
+            # the concatenated payloads and the pending buffer.
+            perm = self._upload_order
+            self.relay_state, self.pending = self._relay_commit(
+                rstate0, self.pending, tuple(payloads),
+                jnp.asarray(r, jnp.int32),
+                jnp.asarray(delays_np[perm], jnp.int32),
+                jnp.asarray(mask_np[perm]))
+        elif mode in ("cors", "fd") and present.size:
             self.relay_state = self._relay_commit(rstate0, tuple(payloads))
 
         up, down = comm.round_floats(
-            mode, n_present=int(present.size), C=ccfg.num_classes,
+            mode, n_present=int(present.size), n_commit=len(commits),
+            C=ccfg.num_classes,
             d=ccfg.d_feature, m_up=ccfg.m_up, m_down=ccfg.m_down)
         self.ledger.log_round(up, down)
 
@@ -539,9 +719,9 @@ class VectorizedCollabTrainer:
             for j, i in enumerate(b.ids):
                 metrics_all[int(i)] = jax.tree.map(lambda v: float(v[j]),
                                                    m_np)
-        return self._log_round(present, up, down, metrics_all)
+        return self._log_round(present, up, down, metrics_all, commits)
 
-    def _log_round(self, present, up, down, metrics_all) -> Dict:
+    def _log_round(self, present, up, down, metrics_all, commits) -> Dict:
         accs = self.evaluate_all()
         rec = {"round": len(self.history) + 1,
                "acc_mean": float(np.mean(accs)),
@@ -549,6 +729,7 @@ class VectorizedCollabTrainer:
                "accs": accs,
                "metrics": metrics_all,
                "participants": present.tolist(),
+               "commits": [[b, c] for b, c in commits],
                "comm_up": up, "comm_down": down}
         self.history.append(rec)
         return rec

@@ -183,7 +183,9 @@ def make_round_sync(ccfg: CollabConfig):
     own leading client axis, as in core/vec_collab.py's bucketed engine):
     the proto state is the only thing heterogeneous buckets share, so a
     mixed fleet at LM scale is N_buckets `train_step`s + ONE round_sync
-    over all their stats. A single homogeneous stack is the 1-bucket case."""
+    over all their stats. A single homogeneous stack is the 1-bucket case.
+    For straggler fleets whose stats commit LATE, use
+    `make_async_round_sync` instead — it carries the clock state."""
     def round_sync(state: TrainState,
                    *bucket_stats: prototypes.ProtoState):
         merged = prototypes.merge(*[
@@ -195,6 +197,68 @@ def make_round_sync(ccfg: CollabConfig):
             decay * state.proto.sum + merged.sum,
             decay * state.proto.count + merged.count))
     return round_sync
+
+
+def make_async_round_sync(ccfg: CollabConfig, d_max: int):
+    """`make_round_sync` for a bounded-delay fleet (repro.sim clocks): a
+    client's round-r stats with commit delay d join the SHARED prototype
+    state in round r+d, not round r — the LM-scale counterpart of the
+    collaborative engines' event-ordered relay (relay/events.py). The
+    prototype merge is a sum, so late contributions are order-free; what
+    must be carried across rounds is the clock state: a fixed-shape
+    pending ProtoState of d_max future slots (slot j = stats due j+1
+    rounds from now).
+
+    Returns (init_pending, round_sync):
+      init_pending(C, d')               -> pending ProtoState (d_max, C, ·)
+      round_sync(state, pending, delays_and_stats...) -> (state, pending)
+        where the varargs alternate (delays_b, stats_b) per bucket:
+        delays_b (k_b,) int32 commit delays, stats_b the bucket's stacked
+        per-client ProtoState. Pure/jittable; delays are traced, so
+        straggler patterns never retrace. d_max = 0 degenerates to
+        `make_round_sync` exactly (empty pending, everything commits now).
+    """
+    assert d_max >= 0, d_max
+
+    def init_pending(C: int, d_feature: int) -> prototypes.ProtoState:
+        return prototypes.ProtoState(
+            jnp.zeros((d_max, C, d_feature), jnp.float32),
+            jnp.zeros((d_max, C), jnp.float32))
+
+    def round_sync(state: TrainState, pending: prototypes.ProtoState,
+                   *delays_and_stats):
+        assert len(delays_and_stats) % 2 == 0, \
+            "pass (delays, stats) per bucket"
+        # scatter every client's stats into its commit-delay slot:
+        # sums[j] = sum of stats committing j rounds from now (j=0: now)
+        C, d = state.proto.sum.shape
+        sums = prototypes.ProtoState(jnp.zeros((d_max + 1, C, d)),
+                                     jnp.zeros((d_max + 1, C)))
+        for b in range(0, len(delays_and_stats), 2):
+            delays = delays_and_stats[b].astype(jnp.int32)
+            stats = delays_and_stats[b + 1]
+            sums = prototypes.ProtoState(
+                sums.sum.at[delays].add(stats.sum, mode="drop"),
+                sums.count.at[delays].add(stats.count, mode="drop"))
+        commit = prototypes.ProtoState(sums.sum[0], sums.count[0])
+        if d_max > 0:
+            commit = prototypes.ProtoState(commit.sum + pending.sum[0],
+                                           commit.count + pending.count[0])
+            # new_pending[j] (due j+1 rounds from now) = what was due j+2
+            # rounds ago-relative (old pending[j+1]) + fresh stats with
+            # delay j+1 (sums[j+1])
+            shift = lambda a, fresh: jnp.concatenate(
+                [a[1:], jnp.zeros_like(a[:1])]) + fresh[1:]
+            pending = prototypes.ProtoState(
+                shift(pending.sum, sums.sum),
+                shift(pending.count, sums.count))
+        decay = ccfg.proto_momentum or 1.0
+        state = state._replace(proto=prototypes.ProtoState(
+            decay * state.proto.sum + commit.sum,
+            decay * state.proto.count + commit.count))
+        return state, pending
+
+    return init_pending, round_sync
 
 
 # ---------------------------------------------------------------------------

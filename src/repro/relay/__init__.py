@@ -2,8 +2,10 @@
 
 Public surface:
   - policies: FlatRelay | PerClassRelay | StalenessRelay, via `get_policy`
-  - schedules: FullParticipation | UniformK | Cyclic | BernoulliP, via
-    `get_schedule`
+  - schedules: FullParticipation | UniformK | Cyclic | BernoulliP |
+    AdaptiveParticipation, via `get_schedule`
+  - `relay.events`: the asynchronous event-ordered commit log (pending
+    uploads, event ordering, clock stamps) driven by `repro.sim` clocks
   - `RelayServer`: stateful wrapper for the sequential trainer
   - base contract + sentinels in `relay.base`
 """
@@ -11,10 +13,12 @@ from __future__ import annotations
 
 from typing import Union
 
+from repro.relay import events  # noqa: F401
 from repro.relay.base import (EMPTY_OWNER, SEED_OWNER, TEACHER_KEYS,
                               RelayPolicy, default_capacity)  # noqa: F401
 from repro.relay.flat import FlatRelay, RelayState  # noqa: F401
-from repro.relay.participation import (BernoulliP, Cyclic,  # noqa: F401
+from repro.relay.participation import (AdaptiveParticipation,  # noqa: F401
+                                       BernoulliP, Cyclic,
                                        FullParticipation,
                                        ParticipationSchedule, UniformK,
                                        get_schedule)

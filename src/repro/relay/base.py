@@ -12,10 +12,15 @@ fixed-shape arrays (jit/vmap/shard_map-compatible, no data-dependent Python):
   init_state(ccfg, d_feature, seed, capacity, n_clients) -> state pytree
       Host-side (numpy ok). Seeds the buffers and random prototypes
       (Algorithm 1 init — the common anchor that aligns feature spaces).
-  append(state, obs_rows, valid_rows, owner_rows, row_mask=None) -> state
+  append(state, obs_rows, valid_rows, owner_rows, row_mask=None,
+         stamp_rows=None) -> state
       Write k uploaded observation rows. `row_mask` (k,) bool, when given,
       drops masked rows WITHOUT consuming ring slots (partial participation:
       absent clients' fixed-shape rows must not advance the write pointer).
+      `stamp_rows` (k,) int32, when given, are the rows' BIRTH clocks (the
+      server logical clock when each upload was produced — see the clock
+      contract below); None stamps every row with the current clock, i.e.
+      the synchronous "born now" case.
   sample_teacher(state, client_id, m_down, key) -> teacher dict
       The downlink. Must return the full fixed-shape teacher dict (keys
       `TEACHER_KEYS`) regardless of buffer fill state.
@@ -24,15 +29,29 @@ fixed-shape arrays (jit/vmap/shard_map-compatible, no data-dependent Python):
       prototypes (the server's only computation), plus any per-round state
       bookkeeping (e.g. staleness age increments).
 
-Ordering: engines call `append` (phase 3 uploads, client-id order) and THEN
+Ordering: engines call `append` (phase 3 uploads, event order — commit
+order; client-id/bucket order for synchronous fleets) and THEN
 `merge_round`, exactly once per round. Policies may rely on that order (the
 staleness policy does: fresh slots are written at age 0, then aged by the
 merge, so a slot uploaded r rounds ago has age r).
 
+Clock contract: every state carries a server logical clock (`clock`, ()
+int32 — the number of merges performed) and a per-slot `stamp` (the birth
+clock of the observation occupying the slot). `merge_round` ticks the
+clock; a round with no commits calls neither `append` nor `merge_round`,
+so the clock freezes with the rest of the state. Slot age is a CLOCK
+property — `age = clock - stamp` for live slots — not a counter: policies
+that expose an `age` field recompute it from the stamps in `merge_round`,
+which makes a delayed upload (stamped with its birth clock by the async
+event log, repro.relay.events) arrive correctly pre-aged. For synchronous
+fleets (every row born at the current clock) this is bit-identical to the
+old once-per-round increment.
+
 Policies are small frozen dataclasses so they can be closed over by jitted
 round steps and used as dict keys. States are NamedTuple pytrees. Every state
 carries the shared prototype fields (`global_protos`, `valid_g`,
-`mean_logits`); `merge_protos` below implements that common part.
+`mean_logits`); `merge_protos` below implements that common part (including
+the clock tick).
 """
 from __future__ import annotations
 
@@ -60,12 +79,22 @@ def default_capacity(ccfg: CollabConfig, n_clients: int = 2) -> int:
 
 def merge_protos(state, proto: prototypes.ProtoState,
                  logit: Optional[prototypes.ProtoState] = None):
-    """Shared part of `merge_round`: per-round recompute of t̄^c (Alg. 1)."""
+    """Shared part of `merge_round`: per-round recompute of t̄^c (Alg. 1)
+    plus the server logical-clock tick (one tick per merge)."""
     state = state._replace(global_protos=prototypes.means(proto),
-                           valid_g=proto.count > 0)
+                           valid_g=proto.count > 0,
+                           clock=state.clock + 1)
     if logit is not None:
         state = state._replace(mean_logits=prototypes.means(logit))
     return state
+
+
+def stamps_or_now(state, k: int, stamp_rows=None):
+    """Resolve `append`'s stamp_rows default: rows born at the current
+    clock. (k,) int32."""
+    if stamp_rows is None:
+        return jnp.full((k,), state.clock, jnp.int32)
+    return stamp_rows.astype(jnp.int32)
 
 
 class RelayPolicy:
@@ -76,7 +105,8 @@ class RelayPolicy:
                    capacity: Optional[int] = None, n_clients: int = 2):
         raise NotImplementedError
 
-    def append(self, state, obs_rows, valid_rows, owner_rows, row_mask=None):
+    def append(self, state, obs_rows, valid_rows, owner_rows, row_mask=None,
+               stamp_rows=None):
         raise NotImplementedError
 
     def sample_teacher(self, state, client_id, m_down: int, key) -> Dict:

@@ -1,0 +1,256 @@
+"""Event-ordered asynchronous relay log — bounded-delay uploads.
+
+The synchronous engines assume a lockstep round barrier: every upload
+produced in round r is committed to the relay in round r. Cross-device
+fleets break that — a straggler's upload arrives rounds later. This module
+is the event log that makes lateness CORRECT instead of impossible:
+
+  - an upload born in round r by the client at upload position u, with
+    commit delay d (from a `repro.sim.ClockModel`, d <= D_max), becomes the
+    event  (birth=r, pos=u)  committed in round r + d;
+  - round t commits, in EVENT ORDER, every event whose commit round is t:
+    ascending birth round first (oldest in-flight upload wins the ring
+    slot ordering), upload position second. Fresh delay-0 uploads have
+    birth t and therefore commit LAST — they are the newest events;
+  - each committed observation row is stamped with the upload's BIRTH
+    clock (the server logical clock when it was produced), so clock-based
+    staleness (relay/base.py) sees through the delay;
+  - uploads still in flight are parked in a fixed-shape pending buffer of
+    D_max slots per client, indexed by birth round mod D_max. Bounded
+    delay makes this collision-free: the entry born in round r has
+    committed by round r + D_max, which is exactly when the slot is needed
+    again — the wraparound invariant the property tests pin.
+
+Both engines consume the same log semantics. The vectorized engine carries
+`PendingState` (arrays, everything below `init_pending` is pure and lives
+inside its jitted round step); the sequential oracle replays the identical
+event order through the host-side `HostEventQueue` and remains the
+bit-exact ring-bookkeeping reference. `D_max = 0` holds no pending state
+and commits every upload at birth — bit-identical to the synchronous
+engines.
+
+Prototype sums ride the same events: a delayed upload's per-class sums
+join the round-t merge (order-free — addition commutes), so the global
+prototypes of round t average exactly the contributions that COMMITTED in
+round t, not the ones that were merely produced.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class PendingState(NamedTuple):
+    """In-flight uploads of a fleet, fixed shape, indexed by
+    [upload position u, pending slot j = birth round mod D_max].
+
+    obs   (N, D, m, C, d') f32 : parked observation rows
+    valid (N, D, C)   bool     : per-class validity of each parked upload
+    psum  (N, D, C, d') f32    : parked per-class prototype sums
+    pcnt  (N, D, C)   f32      : parked per-class prototype counts
+    lsum / lcnt                : FD-mode logit-proto sums (None otherwise)
+    birth (N, D) int32         : round the upload was produced in
+    stamp (N, D) int32         : server logical clock at birth
+    commit (N, D) int32        : round the upload is due to commit in
+    live  (N, D) bool          : slot holds an in-flight upload
+    """
+    obs: jax.Array
+    valid: jax.Array
+    psum: jax.Array
+    pcnt: jax.Array
+    lsum: Optional[jax.Array]
+    lcnt: Optional[jax.Array]
+    birth: jax.Array
+    stamp: jax.Array
+    commit: jax.Array
+    live: jax.Array
+
+    @property
+    def d_max(self) -> int:
+        return self.live.shape[1]
+
+
+def init_pending(n: int, d_max: int, m_up: int, num_classes: int,
+                 d_feature: int, fd: bool = False) -> PendingState:
+    """Empty pending buffer for n upload positions. `fd` adds the
+    logit-proto fields (C x C sums)."""
+    C, d = num_classes, d_feature
+    z = lambda *s: jnp.zeros(s, jnp.float32)
+    zi = lambda *s: jnp.zeros(s, jnp.int32)
+    return PendingState(
+        obs=z(n, d_max, m_up, C, d), valid=jnp.zeros((n, d_max, C), bool),
+        psum=z(n, d_max, C, d), pcnt=z(n, d_max, C),
+        lsum=z(n, d_max, C, C) if fd else None,
+        lcnt=z(n, d_max, C) if fd else None,
+        birth=zi(n, d_max), stamp=zi(n, d_max),
+        commit=jnp.full((n, d_max), -1, jnp.int32),
+        live=jnp.zeros((n, d_max), bool))
+
+
+def event_slot_order(round_idx, d_max: int):
+    """Pending-slot permutation putting slots in EVENT (birth-ascending)
+    order for a round-`round_idx` commit: slot of birth round_idx - d_max,
+    ..., slot of birth round_idx - 1. (d_max,) int32; round_idx may be a
+    traced scalar."""
+    births = round_idx - jnp.arange(d_max, 0, -1, dtype=jnp.int32)
+    return jnp.mod(births, d_max).astype(jnp.int32)
+
+
+def _ordered(pending: PendingState, order):
+    """Reorder the pending buffer to (D, N, ...) with D in event order."""
+    return jax.tree.map(lambda a: jnp.moveaxis(a, 0, 1)[order], pending)
+
+
+def commit_and_park(policy, rstate, pending: PendingState, fresh: Dict,
+                    round_idx, delays, mask):
+    """ONE round of the asynchronous relay, pure and jit-compatible:
+    commit every due event in event order, then park this round's delayed
+    uploads. The single relay write of the async engines.
+
+    fresh: this round's uploads as per-client arrays in UPLOAD (bucket)
+    order — dict(obs (N, m, C, d'), valid (N, C), psum (N, C, d'),
+    pcnt (N, C), lsum/lcnt or None, owner (N,) int32 original client ids).
+    round_idx () int32 traced; delays (N,) int32 (this round's commit
+    delays, upload order); mask (N,) bool participation.
+
+    Returns (new_rstate, new_pending). A round with zero commits leaves
+    rstate untouched (no append, no merge, no clock tick) — the async
+    generalization of the zero-participant no-op round.
+    """
+    N = fresh["owner"].shape[0]
+    m = fresh["obs"].shape[1]
+    D = pending.d_max
+    fresh_commit = mask & (delays == 0)
+    fresh_stamp = jnp.broadcast_to(rstate.clock.astype(jnp.int32), (N,))
+
+    # -- gather the commit set in event order ------------------------------
+    rep = lambda a: jnp.repeat(a, m, axis=0)          # upload -> m obs rows
+    if D > 0:
+        order = event_slot_order(round_idx, D)
+        po = _ordered(pending, order)                 # (D, N, ...) pytree
+        due = po.live & (po.commit == round_idx)      # (D, N)
+        flat = lambda a: a.reshape((D * N,) + a.shape[2:])
+        obs_rows = jnp.concatenate([
+            flat(po.obs).reshape(D * N * m, *po.obs.shape[3:]),
+            fresh["obs"].reshape(N * m, *fresh["obs"].shape[2:])])
+        valid_rows = jnp.concatenate([rep(flat(po.valid)),
+                                      rep(fresh["valid"])])
+        owner_rows = jnp.concatenate([
+            rep(jnp.broadcast_to(fresh["owner"][None], (D, N)).reshape(-1)),
+            rep(fresh["owner"])])
+        row_mask = jnp.concatenate([rep(flat(due)), rep(fresh_commit)])
+        stamp_rows = jnp.concatenate([rep(flat(po.stamp)), rep(fresh_stamp)])
+        # fresh reduction mirrors the synchronous upload phase EXACTLY
+        # (mask-weighted sum over the client axis), so a round whose
+        # pending contribution is zero is bit-identical to the sync merge
+        wf = fresh_commit.astype(jnp.float32)
+        wdue = due.astype(jnp.float32)
+        psum = (jnp.sum(fresh["psum"] * wf[:, None, None], axis=0)
+                + jnp.einsum("dn,dn...->...", wdue, po.psum))
+        pcnt = (jnp.sum(fresh["pcnt"] * wf[:, None], axis=0)
+                + jnp.einsum("dn,dn...->...", wdue, po.pcnt))
+        any_commit = jnp.any(due) | jnp.any(fresh_commit)
+    else:
+        obs_rows = fresh["obs"].reshape(N * m, *fresh["obs"].shape[2:])
+        valid_rows = rep(fresh["valid"])
+        owner_rows = rep(fresh["owner"])
+        row_mask = rep(fresh_commit)
+        stamp_rows = rep(fresh_stamp)
+        wf = fresh_commit.astype(jnp.float32)
+        psum = jnp.sum(fresh["psum"] * wf[:, None, None], axis=0)
+        pcnt = jnp.sum(fresh["pcnt"] * wf[:, None], axis=0)
+        any_commit = jnp.any(fresh_commit)
+
+    from repro.core import prototypes
+    proto = prototypes.ProtoState(psum, pcnt)
+    logit = None
+    if fresh.get("lsum") is not None:
+        lsum = jnp.sum(fresh["lsum"] * wf[:, None, None], axis=0)
+        lcnt = jnp.sum(fresh["lcnt"] * wf[:, None], axis=0)
+        if D > 0:
+            lsum = lsum + jnp.einsum("dn,dn...->...", wdue, po.lsum)
+            lcnt = lcnt + jnp.einsum("dn,dn...->...", wdue, po.lcnt)
+        logit = prototypes.ProtoState(lsum, lcnt)
+
+    new_rstate = policy.append(rstate, obs_rows, valid_rows, owner_rows,
+                               row_mask, stamp_rows)
+    new_rstate = policy.merge_round(new_rstate, proto, logit)
+    rstate = jax.tree.map(lambda n_, o: jnp.where(any_commit, n_, o),
+                          new_rstate, rstate)
+
+    # -- park this round's delayed uploads ---------------------------------
+    if D == 0:
+        return rstate, pending
+    park = mask & (delays > 0)                         # (N,)
+    slot = jnp.mod(round_idx, D).astype(jnp.int32)     # free: see module doc
+    live = pending.live & (pending.commit != round_idx)   # retire the due
+    put = lambda buf, v: buf.at[:, slot].set(v)
+    new_pending = pending._replace(
+        obs=put(pending.obs, fresh["obs"]),
+        valid=put(pending.valid, fresh["valid"]),
+        psum=put(pending.psum, fresh["psum"]),
+        pcnt=put(pending.pcnt, fresh["pcnt"]),
+        lsum=(put(pending.lsum, fresh["lsum"])
+              if pending.lsum is not None else None),
+        lcnt=(put(pending.lcnt, fresh["lcnt"])
+              if pending.lcnt is not None else None),
+        birth=put(pending.birth, jnp.broadcast_to(round_idx, (N,))
+                  .astype(jnp.int32)),
+        stamp=put(pending.stamp, fresh_stamp),
+        commit=put(pending.commit, (round_idx + delays).astype(jnp.int32)),
+        live=put(live, park))
+    return rstate, new_pending
+
+
+# ---------------------------------------------------------------------------
+# the sequential oracle's replay queue + host-side commit bookkeeping
+# ---------------------------------------------------------------------------
+class HostEventQueue:
+    """Host-side event log: the sequential oracle's (and the vectorized
+    engine's billing mirror's) replay of the commit order above. Events are
+    (birth, pos, client_id, stamp, payload); `pop_due(t)` returns round t's
+    commit set sorted by (birth, pos) — exactly the order
+    `commit_and_park` appends rows in."""
+
+    def __init__(self):
+        self._events: List[Tuple[int, int, int, int, object]] = []
+
+    def push(self, birth: int, pos: int, client_id: int, stamp: int,
+             payload, delay: int):
+        self._events.append((int(birth), int(pos), int(client_id),
+                             int(stamp), payload, int(birth) + int(delay)))
+
+    def pop_due(self, round_idx: int):
+        due = sorted((e for e in self._events if e[5] == int(round_idx)),
+                     key=lambda e: (e[0], e[1]))
+        self._events = [e for e in self._events if e[5] != int(round_idx)]
+        return due
+
+    def __len__(self):
+        return len(self._events)
+
+
+class CommitMirror:
+    """Payload-free `HostEventQueue` so the vectorized engine can report
+    per-round commit lists and bill the comm ledger WITHOUT pulling device
+    arrays: both engines derive the same (birth, client) commit sets from
+    the same deterministic masks/delays, through the SAME queue semantics
+    (one definition of the commit order, not two)."""
+
+    def __init__(self):
+        self._q = HostEventQueue()
+
+    def step(self, round_idx: int, mask: np.ndarray, delays: np.ndarray,
+             upload_order) -> List[Tuple[int, int]]:
+        """Advance one round: returns the round's commits as
+        [(birth_round, client_id), ...] in event order."""
+        for pos, cid in enumerate(upload_order):
+            if mask[cid]:
+                self._q.push(birth=round_idx, pos=pos, client_id=int(cid),
+                             stamp=0, payload=None,
+                             delay=int(delays[cid]))
+        return [(birth, cid)
+                for birth, _, cid, *_ in self._q.pop_due(round_idx)]

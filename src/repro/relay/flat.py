@@ -31,6 +31,10 @@ class RelayState(NamedTuple):
     ptr   ()          int32: next ring write position
     global_protos (C, d') f32, valid_g (C,) bool: the t̄^c prototypes
     mean_logits (C, C) f32 : FD-mode per-class mean logits (zeros otherwise)
+    stamp (cap,)      int32: birth clock of the slot's observation (the
+                             server logical clock when it was produced —
+                             the event log's commit stamp, relay/events.py)
+    clock ()          int32: server logical clock (merges performed)
     """
     obs: jax.Array
     valid: jax.Array
@@ -39,6 +43,8 @@ class RelayState(NamedTuple):
     global_protos: jax.Array
     valid_g: jax.Array
     mean_logits: jax.Array
+    stamp: jax.Array
+    clock: jax.Array
 
     @property
     def capacity(self) -> int:
@@ -72,29 +78,34 @@ def init_relay_state(ccfg: CollabConfig, d_feature: int, seed: int = 0,
                       ptr=jnp.asarray(n_seed % cap, jnp.int32),
                       global_protos=jnp.asarray(protos),
                       valid_g=jnp.ones((C,), bool),
-                      mean_logits=jnp.zeros((C, C), jnp.float32))
+                      mean_logits=jnp.zeros((C, C), jnp.float32),
+                      stamp=jnp.zeros((cap,), jnp.int32),
+                      clock=jnp.zeros((), jnp.int32))
 
 
 # -- uplink (pure) ---------------------------------------------------------
 def buffer_append(state: RelayState, obs_rows, valid_rows, owner_rows,
-                  row_mask=None) -> RelayState:
+                  row_mask=None, stamp_rows=None) -> RelayState:
     """Write k observation rows into the ring (oldest-first overwrite).
 
     obs_rows (k, C, d'), valid_rows (k, C), owner_rows (k,) int32,
     row_mask (k,) bool or None. Rows with row_mask False are dropped
     without consuming a ring slot (absent clients in a partial round).
-    The number of masked-in rows must not exceed capacity (scatter order
-    for duplicate ring indices is undefined); callers size the buffer with
-    `default_capacity`.
+    stamp_rows (k,) int32 or None: per-row birth clocks (None = born at the
+    current clock — the synchronous case). The number of masked-in rows
+    must not exceed capacity (scatter order for duplicate ring indices is
+    undefined); callers size the buffer with `default_capacity`.
     """
     k = obs_rows.shape[0]
     cap = state.obs.shape[0]
     idx, new_ptr = base.ring_indices(state.ptr, k, cap, row_mask)
+    stamps = base.stamps_or_now(state, k, stamp_rows)
     return state._replace(
         obs=state.obs.at[idx].set(obs_rows.astype(jnp.float32), mode="drop"),
         valid=state.valid.at[idx].set(valid_rows, mode="drop"),
         owner=state.owner.at[idx].set(owner_rows.astype(jnp.int32),
                                       mode="drop"),
+        stamp=state.stamp.at[idx].set(stamps, mode="drop"),
         ptr=new_ptr)
 
 
@@ -142,9 +153,10 @@ class FlatRelay(base.RelayPolicy):
                    n_clients=2):
         return init_relay_state(ccfg, d_feature, seed, capacity, n_clients)
 
-    def append(self, state, obs_rows, valid_rows, owner_rows, row_mask=None):
+    def append(self, state, obs_rows, valid_rows, owner_rows, row_mask=None,
+               stamp_rows=None):
         return buffer_append(state, obs_rows, valid_rows, owner_rows,
-                             row_mask)
+                             row_mask, stamp_rows)
 
     def sample_teacher(self, state, client_id, m_down, key):
         return sample_teacher(state, client_id, m_down, key)

@@ -123,16 +123,97 @@ class BernoulliP(ParticipationSchedule):
         return rng.random(n_clients) < self.p
 
 
-def get_schedule(spec, seed: int = 0) -> ParticipationSchedule:
+class AdaptiveParticipation(ParticipationSchedule):
+    """Closed-loop schedule (ROADMAP "Adaptive participation"): boost a
+    straggler's participation probability from its OBSERVED commit delays.
+
+    Open-loop schedules treat every client alike, but under a straggler
+    clock model a slow client's uploads commit rounds late — it effectively
+    contributes less per wall-clock round. This schedule keeps a per-client
+    EMA of the commit delays the server has OBSERVED (a commit born in
+    round r arriving in round r+d is observed, with value d, in round r+d)
+    and raises the straggler's presence probability:
+
+        p_i(t) = clip(p · (1 + boost · ema_i(t) / (1 + D_max)), p, 1)
+
+    so a persistent straggler is scheduled up to `(1 + boost)`× as often,
+    amortizing its lateness with extra attempts, while fast clients stay
+    at the base rate.
+
+    Determinism (the property every schedule must keep): the mask depends
+    only on (p, boost, seed, the bound ClockModel, round index). The
+    observation stream is DERIVED, not fed: clock delays are deterministic
+    and past masks are recursively determined, so two independently
+    constructed instances — one per engine — agree round by round, which is
+    exactly how the seq/vec equivalence tests drive it. Bind the fleet's
+    clock with `bind_clock` (the trainers do); unbound, all observed
+    delays are 0 and this degenerates to `bernoulli:p`.
+    """
+    name: str = "adaptive"
+
+    def __init__(self, p: float = 0.5, boost: float = 1.0, seed: int = 0,
+                 alpha: float = 0.3):
+        from repro.relay import events
+        assert 0.0 < p <= 1.0, p
+        self.p, self.boost, self.seed, self.alpha = p, boost, seed, alpha
+        self.clock = None
+        self._masks: list = []          # per computed round: (N,) bool
+        self._ema: Optional[np.ndarray] = None
+        # in-flight uploads, through the SAME event-queue semantics the
+        # relay commits with (relay/events.py) — the observed timeline IS
+        # the commit timeline by construction, not by parallel bookkeeping
+        self._inflight = events.HostEventQueue()
+
+    def bind_clock(self, clock) -> "AdaptiveParticipation":
+        """Attach the fleet's ClockModel (the source of observed delays).
+        Must happen before the first `mask` call."""
+        assert not self._masks, "bind_clock must precede the first mask()"
+        self.clock = clock
+        return self
+
+    def _probs(self, n_clients: int) -> np.ndarray:
+        if self._ema is None:
+            self._ema = np.zeros((n_clients,))
+        d_max = self.clock.d_max if self.clock is not None else 0
+        p = self.p * (1.0 + self.boost * self._ema / (1.0 + d_max))
+        return np.clip(p, self.p, 1.0)
+
+    def mask(self, round_idx: int, n_clients: int) -> np.ndarray:
+        while len(self._masks) <= round_idx:
+            t = len(self._masks)
+            m = (np.random.default_rng([self.seed, 0xada, t])
+                 .random(n_clients) < self._probs(n_clients))
+            self._masks.append(m)
+            delays = (self.clock.delays(t, n_clients)
+                      if self.clock is not None
+                      else np.zeros(n_clients, np.int64))
+            for i in np.nonzero(m)[0]:
+                self._inflight.push(birth=t, pos=int(i), client_id=int(i),
+                                    stamp=0, payload=int(delays[i]),
+                                    delay=int(delays[i]))
+            # observe this round's arrivals (incl. delay-0 births), in
+            # commit (event) order
+            for _, _, i, _, d, _ in self._inflight.pop_due(t):
+                self._ema[i] = (1 - self.alpha) * self._ema[i] \
+                    + self.alpha * d
+        return self._masks[round_idx].copy()
+
+
+def get_schedule(spec, seed: int = 0, clock=None) -> ParticipationSchedule:
     """Parse a CLI-style schedule spec into a schedule object.
 
-    Specs: "full" | "uniform_k:K" | "cyclic:K" | "bernoulli:P", e.g.
-    "uniform_k:8" or "bernoulli:0.5". A ParticipationSchedule instance
-    passes through unchanged; None means full participation.
+    Specs: "full" | "uniform_k:K" | "cyclic:K" | "bernoulli:P" |
+    "adaptive:P[,BOOST]", e.g. "uniform_k:8" or "adaptive:0.5,2". A
+    ParticipationSchedule instance passes through unchanged; None means
+    full participation. `clock` (a repro.sim.ClockModel) is bound to
+    adaptive schedules — they close the loop on its observed commit delays.
     """
     if spec is None:
         return FullParticipation()
     if isinstance(spec, ParticipationSchedule):
+        if isinstance(spec, AdaptiveParticipation) and clock is not None \
+                and spec.clock is None:
+            spec.bind_clock(clock)
         return spec
     name, _, arg = str(spec).partition(":")
     if name == "full":
@@ -143,4 +224,10 @@ def get_schedule(spec, seed: int = 0) -> ParticipationSchedule:
         return Cyclic(k=int(arg))
     if name in ("bernoulli", "bernoulli_p"):
         return BernoulliP(p=float(arg), seed=seed)
+    if name == "adaptive":
+        args = [a for a in arg.split(",") if a] if arg else []
+        sched = AdaptiveParticipation(
+            p=float(args[0]) if args else 0.5,
+            boost=float(args[1]) if len(args) > 1 else 1.0, seed=seed)
+        return sched.bind_clock(clock) if clock is not None else sched
     raise ValueError(f"unknown participation schedule: {spec!r}")

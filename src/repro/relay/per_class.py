@@ -28,9 +28,11 @@ from repro.types import CollabConfig
 
 
 class PerClassRelayState(NamedTuple):
-    """obs (C, cap_c, d') f32; valid/age (C, cap_c); owner (C, cap_c) int32;
-    ptr (C,) int32 — one independent ring per class — plus the shared
-    prototype fields (see relay/base.py)."""
+    """obs (C, cap_c, d') f32; valid/age/stamp (C, cap_c); owner (C, cap_c)
+    int32; ptr (C,) int32 — one independent ring per class — plus the shared
+    prototype/clock fields (see relay/base.py). `stamp` is each slot's birth
+    clock and `age` is always clock − stamp for valid slots (recomputed in
+    `merge_round`), 0 for empty ones."""
     obs: jax.Array
     valid: jax.Array
     owner: jax.Array
@@ -39,6 +41,8 @@ class PerClassRelayState(NamedTuple):
     global_protos: jax.Array
     valid_g: jax.Array
     mean_logits: jax.Array
+    stamp: jax.Array
+    clock: jax.Array
 
     @property
     def capacity(self) -> int:
@@ -78,25 +82,31 @@ class PerClassRelay(base.RelayPolicy):
             ptr=jnp.full((C,), n_seed % cap_c, jnp.int32),
             global_protos=jnp.asarray(protos),
             valid_g=jnp.ones((C,), bool),
-            mean_logits=jnp.zeros((C, C), jnp.float32))
+            mean_logits=jnp.zeros((C, C), jnp.float32),
+            stamp=jnp.zeros((C, cap_c), jnp.int32),
+            clock=jnp.zeros((), jnp.int32))
 
     # -- uplink (pure) -----------------------------------------------------
     def append(self, state: PerClassRelayState, obs_rows, valid_rows,
-               owner_rows, row_mask=None) -> PerClassRelayState:
+               owner_rows, row_mask=None,
+               stamp_rows=None) -> PerClassRelayState:
         """Scatter k uploaded rows into their class rings.
 
         obs_rows (k, C, d'), valid_rows (k, C), owner_rows (k,),
-        row_mask (k,) bool or None. Row i contributes its class-c slice to
-        ring c only when valid_rows[i, c] (the client had samples of class
-        c) and row_mask[i]; each ring's pointer advances by its own write
-        count. Per class, writes land in row order — identical to appending
-        the rows one by one — so the sequential oracle (one append per
-        client) and the vectorized engine (one batched append) evolve the
-        same rings. Masked-in writes per class must not exceed cap_c."""
+        row_mask (k,) bool or None, stamp_rows (k,) int32 or None (birth
+        clocks; None = born at the current clock). Row i contributes its
+        class-c slice to ring c only when valid_rows[i, c] (the client had
+        samples of class c) and row_mask[i]; each ring's pointer advances
+        by its own write count. Per class, writes land in row order —
+        identical to appending the rows one by one — so the sequential
+        oracle (one append per client) and the vectorized engine (one
+        batched append) evolve the same rings. Masked-in writes per class
+        must not exceed cap_c."""
         k, C = valid_rows.shape
         cap_c = state.obs.shape[1]
         if row_mask is None:
             row_mask = jnp.ones((k,), bool)
+        stamps = base.stamps_or_now(state, k, stamp_rows)
         w = valid_rows & row_mask[:, None]                     # (k, C)
         offs = jnp.cumsum(w.astype(jnp.int32), axis=0) - 1
         slot = jnp.where(w, (state.ptr[None, :] + offs) % cap_c,
@@ -104,12 +114,15 @@ class PerClassRelay(base.RelayPolicy):
         cidx = jnp.broadcast_to(jnp.arange(C, dtype=jnp.int32)[None], (k, C))
         owner_b = jnp.broadcast_to(owner_rows.astype(jnp.int32)[:, None],
                                    (k, C))
+        stamp_b = jnp.broadcast_to(stamps[:, None], (k, C))
         return state._replace(
             obs=state.obs.at[cidx, slot].set(
                 obs_rows.astype(jnp.float32), mode="drop"),
             valid=state.valid.at[cidx, slot].set(True, mode="drop"),
             owner=state.owner.at[cidx, slot].set(owner_b, mode="drop"),
-            age=state.age.at[cidx, slot].set(0, mode="drop"),
+            age=state.age.at[cidx, slot].set(state.clock - stamp_b,
+                                             mode="drop"),
+            stamp=state.stamp.at[cidx, slot].set(stamp_b, mode="drop"),
             ptr=(state.ptr + jnp.sum(w.astype(jnp.int32), axis=0)) % cap_c)
 
     # -- downlink (pure) ---------------------------------------------------
@@ -144,8 +157,11 @@ class PerClassRelay(base.RelayPolicy):
                 "mean_logits": state.mean_logits}
 
     def merge_round(self, state, proto, logit=None):
+        """Prototype merge + clock tick; age recomputed from the stamps
+        (see relay/base.py's clock contract)."""
         state = base.merge_protos(state, proto, logit)
-        return state._replace(age=jnp.where(state.valid, state.age + 1,
+        return state._replace(age=jnp.where(state.valid,
+                                            state.clock - state.stamp,
                                             state.age))
 
     def debug_entries(self, state):

@@ -45,7 +45,12 @@ class RelayServer:
         self.round_states = []
         self.round_logit_states = []
 
-    def upload(self, client_id: int, payload: Dict):
+    def upload(self, client_id: int, payload: Dict, stamp=None):
+        """Append one client's upload. `stamp` (int or None) is the birth
+        clock of the upload — the server logical clock when it was
+        PRODUCED. None means born now (the synchronous case); the async
+        event log (relay/events.py) passes the true birth clock so delayed
+        commits arrive correctly pre-aged."""
         self.round_states.append(payload["proto"])
         if "logit_proto" in payload:
             self.round_logit_states.append(payload["logit_proto"])
@@ -54,7 +59,9 @@ class RelayServer:
         self.state = self.policy.append(
             self.state, obs,
             jnp.broadcast_to(payload["valid"], (m,) + payload["valid"].shape),
-            jnp.full((m,), client_id, jnp.int32))
+            jnp.full((m,), client_id, jnp.int32),
+            stamp_rows=(None if stamp is None
+                        else jnp.full((m,), stamp, jnp.int32)))
 
     def end_round(self):
         if self.round_states:

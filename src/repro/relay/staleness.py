@@ -3,9 +3,17 @@
 In a cross-device deployment with partial participation, ring slots can be
 many rounds old; a representation uploaded 50 rounds ago was produced by a
 model that no longer exists, and uniform sampling keeps relaying it. This
-policy tracks per-slot age (rounds since upload, incremented in
-`merge_round`, reset to 0 on write) and samples teachers with probability
+policy tracks per-slot age and samples teachers with probability
 ∝ exp(-λ·age) over the eligible pool.
+
+Age is a CLOCK property, not a counter: every slot stores the birth clock
+of its observation (`stamp`) and `merge_round` recomputes
+`age = clock − stamp` for live slots from the server logical clock (see
+relay/base.py). For synchronous fleets every row is born at the current
+clock, which is bit-identical to the old "+1 per merge, reset on write"
+bookkeeping; under the asynchronous event log (relay/events.py) a delayed
+upload arrives stamped with its TRUE birth clock and therefore correctly
+pre-aged — exp(-λ·age) then discounts in-flight lateness for free.
 
 Sampling is a jittable Gumbel-top-k: add i.i.d. Gumbel noise to the masked
 log-weights (-λ·age over the pool, -inf outside) and take the top m_down
@@ -28,7 +36,9 @@ from repro.types import CollabConfig
 
 
 class StalenessRelayState(NamedTuple):
-    """Flat ring (see relay/flat.py) + per-slot age (cap,) int32."""
+    """Flat ring (see relay/flat.py) + per-slot age (cap,) int32 (always
+    equal to clock − stamp for live slots, 0 for empty ones — stored so
+    sampling reads it directly and tests can pin it)."""
     obs: jax.Array
     valid: jax.Array
     owner: jax.Array
@@ -37,6 +47,8 @@ class StalenessRelayState(NamedTuple):
     global_protos: jax.Array
     valid_g: jax.Array
     mean_logits: jax.Array
+    stamp: jax.Array
+    clock: jax.Array
 
     @property
     def capacity(self) -> int:
@@ -69,18 +81,22 @@ class StalenessRelay(base.RelayPolicy):
             obs=s.obs, valid=s.valid, owner=s.owner,
             age=jnp.zeros((s.obs.shape[0],), jnp.int32), ptr=s.ptr,
             global_protos=s.global_protos, valid_g=s.valid_g,
-            mean_logits=s.mean_logits)
+            mean_logits=s.mean_logits, stamp=s.stamp, clock=s.clock)
 
     # -- uplink (pure) -----------------------------------------------------
     def append(self, state: StalenessRelayState, obs_rows, valid_rows,
-               owner_rows, row_mask=None) -> StalenessRelayState:
+               owner_rows, row_mask=None,
+               stamp_rows=None) -> StalenessRelayState:
         """Flat ring append (delegated, so the masked-index math lives in
-        one place); written slots restart at age 0."""
+        one place); written slots start at age = clock − birth stamp (0 for
+        rows born this round, > 0 for delayed async commits)."""
         idx, _ = base.ring_indices(state.ptr, obs_rows.shape[0],
                                    state.obs.shape[0], row_mask)
+        stamps = base.stamps_or_now(state, obs_rows.shape[0], stamp_rows)
         state = flat.buffer_append(state, obs_rows, valid_rows, owner_rows,
-                                   row_mask)
-        return state._replace(age=state.age.at[idx].set(0, mode="drop"))
+                                   row_mask, stamp_rows)
+        return state._replace(
+            age=state.age.at[idx].set(state.clock - stamps, mode="drop"))
 
     # -- downlink (pure) ---------------------------------------------------
     def sample_teacher(self, state: StalenessRelayState, client_id,
@@ -119,10 +135,13 @@ class StalenessRelay(base.RelayPolicy):
                 "mean_logits": state.mean_logits}
 
     def merge_round(self, state, proto, logit=None):
-        """Prototype merge + one round of aging for every live slot."""
+        """Prototype merge + clock tick; age recomputed from the stamps
+        (clock − birth) for live slots — the clock-based replacement of the
+        old once-per-round increment (bit-identical for synchronous rows)."""
         state = base.merge_protos(state, proto, logit)
         live = state.owner != EMPTY_OWNER
-        return state._replace(age=jnp.where(live, state.age + 1, state.age))
+        return state._replace(
+            age=jnp.where(live, state.clock - state.stamp, state.age))
 
     def debug_entries(self, state):
         import numpy as np

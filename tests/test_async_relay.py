@@ -1,0 +1,317 @@
+"""Asynchronous event-ordered relay (src/repro/relay/events.py + sim/).
+
+The tentpole invariant: under bounded-delay uploads, the vectorized
+engine's jitted pending-buffer commit and the sequential oracle's
+host-side event replay evolve IDENTICAL relay state — exact ring pointers,
+owners, validity, clock stamps and ages — across every relay policy ×
+clock model, with identical per-round commit lists and comm ledgers. Plus:
+the D_max=0 async machinery is bit-identical to the synchronous engines,
+zero-commit rounds are relay no-ops, billing follows commit/sync rounds,
+the async step never retraces, the adaptive schedule closes the loop
+deterministically, and `make_async_round_sync` conserves prototype mass.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import relay as relay_lib, sim
+from repro.core import client as client_lib, collab, prototypes, vec_collab
+from repro.data import partition, synthetic
+from repro.launch import train
+from repro.models import mlp
+from repro.types import CollabConfig, TrainConfig
+
+SPEC = client_lib.ClientSpec(
+    apply=lambda p, x: mlp.apply(p, x),
+    head=lambda p: (p["head_w"], p["head_b"]))
+SPEC_B = client_lib.ClientSpec(
+    apply=lambda p, x: mlp.apply(p, x),
+    head=lambda p: (p["head_w"], p["head_b"]))
+
+POLICIES = ["flat", "per_class", "staleness"]
+CLOCKS = ["homogeneous:1", "lognormal:2", "periodic:2,3"]
+
+
+def _build(engine, policy, clock, schedule=None, mode="cors", n_clients=4,
+           n=192, seed=0, hetero=False):
+    x, y = synthetic.class_images(n, seed=0, noise=0.4)
+    tx, ty = synthetic.class_images(96, seed=9, noise=0.4)
+    parts = partition.uniform_split(x, y, n_clients, seed=1)
+    ccfg = CollabConfig(mode=mode, num_classes=10, d_feature=84,
+                        lambda_kd=2.0,
+                        lambda_disc=1.0 if mode == "cors" else 0.0)
+    tcfg = TrainConfig(batch_size=16)
+    keys = jax.random.split(jax.random.PRNGKey(seed), n_clients)
+    if hetero:
+        specs = [SPEC if i % 2 == 0 else SPEC_B for i in range(n_clients)]
+        params = [mlp.init_mlp(k, hidden=64 if i % 2 == 0 else 96)
+                  for i, k in enumerate(keys)]
+    else:
+        specs = [SPEC] * n_clients
+        params = [mlp.init_mlp(k) for k in keys]
+    cls = (collab.CollabTrainer if engine == "seq"
+           else vec_collab.VectorizedCollabTrainer)
+    return cls(specs, params, parts, (tx, ty), ccfg, tcfg, seed=seed,
+               policy=policy, schedule=schedule, clock=clock)
+
+
+def _assert_states_match(ss, vs):
+    """Ring/clock bookkeeping must be EXACT; observations float-tolerant
+    (vmap-batched update association)."""
+    for f in ("ptr", "owner", "valid", "stamp", "clock"):
+        np.testing.assert_array_equal(np.asarray(getattr(ss, f)),
+                                      np.asarray(getattr(vs, f)),
+                                      err_msg=f)
+    if hasattr(ss, "age"):
+        np.testing.assert_array_equal(np.asarray(ss.age), np.asarray(vs.age))
+    np.testing.assert_allclose(np.asarray(ss.obs), np.asarray(vs.obs),
+                               atol=5e-3)
+    np.testing.assert_allclose(np.asarray(ss.global_protos),
+                               np.asarray(vs.global_protos), atol=5e-3)
+    np.testing.assert_array_equal(np.asarray(ss.valid_g),
+                                  np.asarray(vs.valid_g))
+
+
+def _run_matched(seq, vec, rounds=3):
+    for _ in range(rounds):
+        rs, rv = seq.run_round(), vec.run_round()
+        assert rs["participants"] == rv["participants"]
+        assert rs["commits"] == rv["commits"]
+        np.testing.assert_allclose(rs["accs"], rv["accs"], atol=2e-2)
+    assert seq.ledger.by_round == vec.ledger.by_round
+    _assert_states_match(seq.server.state, vec.relay_state)
+
+
+# ---------------------------------------------------------------------------
+# tentpole: seq event replay == vec pending buffer, policy × clock matrix
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("clock", CLOCKS)
+def test_async_seq_vec_equivalence(policy, clock):
+    _run_matched(_build("seq", policy, clock), _build("vec", policy, clock))
+
+
+def test_async_fd_mode_and_partial_participation():
+    """Delayed logit-proto commits (FD) under a variable-count schedule."""
+    _run_matched(_build("seq", "flat", "lognormal:2", "bernoulli:0.5",
+                        mode="fd"),
+                 _build("vec", "flat", "lognormal:2", "bernoulli:0.5",
+                        mode="fd"), rounds=4)
+
+
+def test_async_hetero_buckets():
+    """Two interleaved buckets share ONE pending buffer (upload-position
+    indexed): delayed commits must still land in bucket-event order."""
+    _run_matched(_build("seq", "staleness", "periodic:2,3", hetero=True),
+                 _build("vec", "staleness", "periodic:2,3", hetero=True))
+
+
+def test_dmax0_machinery_bit_identical_to_sync():
+    """HomogeneousClock(0, d_max=1) forces the pending-buffer machinery
+    with every delay 0: both engines must match their clock=None selves
+    bit-for-bit (the acceptance anchor for D_max = 0)."""
+    for engine in ("seq", "vec"):
+        a = _build(engine, "staleness", sim.HomogeneousClock(0, d_max=1),
+                   n_clients=3)
+        b = _build(engine, "staleness", None, n_clients=3)
+        if engine == "vec":
+            assert a._async and not b._async
+        for _ in range(2):
+            ra, rb = a.run_round(), b.run_round()
+            assert ra["commits"] == rb["commits"]
+            assert ra["accs"] == rb["accs"]
+        sa = a.server.state if engine == "seq" else a.relay_state
+        sb = b.server.state if engine == "seq" else b.relay_state
+        jax.tree.map(lambda x, y: np.testing.assert_array_equal(
+            np.asarray(x), np.asarray(y)), sa, sb)
+        assert a.ledger.by_round == b.ledger.by_round
+
+
+# ---------------------------------------------------------------------------
+# commit timing semantics: no-op rounds, billing, staleness pre-aging
+# ---------------------------------------------------------------------------
+def test_zero_commit_round_is_relay_noop_and_bills_no_uplink():
+    """homogeneous:2 parks EVERY upload for 2 rounds: rounds 0-1 have no
+    commits (relay untouched, zero uplink billed, downlink still billed
+    for the syncing clients); round 2 commits round 0's uploads."""
+    for engine in ("seq", "vec"):
+        tr = _build(engine, "flat", "homogeneous:2", n_clients=3)
+        state0 = jax.tree.map(
+            np.asarray,
+            tr.server.state if engine == "seq" else tr.relay_state)
+        ccfg = tr.ccfg
+        down_per = (ccfg.m_down + 1) * ccfg.num_classes * ccfg.d_feature
+        up_per = (ccfg.m_up + 1) * ccfg.num_classes * ccfg.d_feature
+        for r in range(2):
+            rec = tr.run_round()
+            assert rec["commits"] == []
+            assert rec["comm_up"] == 0.0
+            assert rec["comm_down"] == 3 * down_per
+        state1 = jax.tree.map(
+            np.asarray,
+            tr.server.state if engine == "seq" else tr.relay_state)
+        jax.tree.map(np.testing.assert_array_equal, state0, state1)
+        rec = tr.run_round()                    # round 2: birth-0 commits
+        assert rec["commits"] == [[0, 0], [0, 1], [0, 2]]
+        assert rec["comm_up"] == 3 * up_per
+
+
+def test_uplink_floats_conserved_after_drain():
+    """Async shifts uplink billing across rounds but never loses or
+    invents floats: after the queue drains, totals equal the sync run."""
+    a = _build("seq", "flat", "lognormal:2", n_clients=4)
+    b = _build("seq", "flat", None, n_clients=4)
+    for _ in range(4):
+        a.run_round()
+        b.run_round()
+    # drain: no new births, only pending commits
+    a.schedule = relay_lib.get_schedule(_NoShow(), seed=0)
+    while len(a._queue):
+        a.run_round()
+    assert a.ledger.up_floats == b.ledger.up_floats
+    assert a.ledger.down_floats == b.ledger.down_floats
+
+
+class _NoShow(relay_lib.ParticipationSchedule):
+    name = "noshow"
+
+    def mask(self, round_idx, n_clients):
+        return np.zeros((n_clients,), bool)
+
+
+def test_delayed_commit_arrives_preaged_under_staleness():
+    """A row born at clock c committing after d merges must enter with
+    age = current clock − c, not age 0: clock-based staleness sees through
+    the delay."""
+    ccfg = CollabConfig(num_classes=3, d_feature=2, m_down=1)
+    pol = relay_lib.get_policy("staleness")
+    st = pol.init_state(ccfg, 2, capacity=4)
+    proto = prototypes.ProtoState(jnp.ones((3, 2)), jnp.ones((3,)))
+    st = pol.merge_round(st, proto)              # clock 1
+    st = pol.merge_round(st, proto)              # clock 2
+    st = pol.append(st, jnp.ones((1, 3, 2)), jnp.ones((1, 3), bool),
+                    jnp.asarray([7], jnp.int32),
+                    stamp_rows=jnp.asarray([0], jnp.int32))  # born at 0
+    assert int(np.asarray(st.age)[1]) == 2       # pre-aged on arrival
+    st = pol.merge_round(st, proto)              # clock 3
+    assert int(np.asarray(st.age)[1]) == 3
+    assert int(np.asarray(st.stamp)[1]) == 0
+
+
+# ---------------------------------------------------------------------------
+# engine mechanics: no retrace, mesh guard, compaction fallback
+# ---------------------------------------------------------------------------
+def test_async_round_step_compiles_once():
+    """round_idx and delays are traced args: 3 rounds = 1 compile."""
+    vec = _build("vec", "per_class", "lognormal:2", n_clients=4)
+    for _ in range(3):
+        vec.run_round()
+    assert vec._round_step._cache_size() == 1
+
+
+def test_async_rejects_mesh():
+    from repro import sharding
+    x, y = synthetic.class_images(64, seed=0)
+    with pytest.raises(ValueError, match="mesh"):
+        vec_collab.VectorizedCollabTrainer(
+            [SPEC] * 2,
+            [mlp.init_mlp(k) for k in
+             jax.random.split(jax.random.PRNGKey(0), 2)],
+            partition.uniform_split(x, y, 2, seed=1),
+            synthetic.class_images(32, seed=9),
+            CollabConfig(num_classes=10, d_feature=84), TrainConfig(),
+            clock="lognormal:2", mesh=sharding.client_mesh(1))
+
+
+def test_async_disables_static_k_compaction():
+    """Lateness decouples the commit set from the participant set, so the
+    async step must run full-width even under a fixed-k schedule — and
+    still match the oracle exactly."""
+    seq = _build("seq", "flat", "lognormal:2", schedule="uniform_k:2")
+    vec = _build("vec", "flat", "lognormal:2", schedule="uniform_k:2")
+    assert vec._k_active == vec.n_clients        # no participant gather
+    _run_matched(seq, vec)
+
+
+# ---------------------------------------------------------------------------
+# clock models + adaptive participation
+# ---------------------------------------------------------------------------
+def test_clock_models_deterministic_and_bounded():
+    for spec in ("homogeneous:1", "lognormal:3", "periodic:2,3"):
+        a, b = sim.get_clock(spec, seed=4), sim.get_clock(spec, seed=4)
+        for r in range(6):
+            da, db = a.delays(r, 8), b.delays(r, 8)
+            np.testing.assert_array_equal(da, db)
+            assert (da >= 0).all() and (da <= a.d_max).all()
+    assert sim.get_clock(None) is None
+    assert sim.get_clock("none") is None
+    assert sim.get_clock("homogeneous").d_max == 0
+    with pytest.raises(ValueError):
+        sim.get_clock("warp:9")
+
+
+def test_periodic_clock_waits_for_next_window():
+    c = sim.PeriodicClock(d_max=4, period=3)
+    d0 = c.delays(0, 6)
+    np.testing.assert_array_equal(d0, [0, 1, 2, 0, 1, 2])
+    d1 = c.delays(1, 6)
+    np.testing.assert_array_equal(d1, [2, 0, 1, 2, 0, 1])
+
+
+def test_adaptive_schedule_deterministic_and_boosts_stragglers():
+    clock = sim.LognormalClock(d_max=4, sigma=1.2, seed=3)
+    a = relay_lib.get_schedule("adaptive:0.4,2", seed=7, clock=clock)
+    b = relay_lib.get_schedule("adaptive:0.4,2", seed=7, clock=clock)
+    R, N = 40, 8
+    for r in range(R):
+        np.testing.assert_array_equal(a.mask(r, N), b.mask(r, N))
+    freq = np.mean([a.mask(r, N) for r in range(R)], axis=0)
+    mean_delay = np.mean([clock.delays(r, N) for r in range(R)], axis=0)
+    stragglers = mean_delay > np.median(mean_delay)
+    assert freq[stragglers].mean() > freq[~stragglers].mean()
+    # unbound adaptive degenerates to plain bernoulli-style base rate
+    c = relay_lib.get_schedule("adaptive:0.4", seed=7)
+    assert c.clock is None
+    m = np.mean([c.mask(r, 64) for r in range(30)])
+    assert abs(m - 0.4) < 0.1
+
+
+# ---------------------------------------------------------------------------
+# LM-scale async round sync (launch/train.py)
+# ---------------------------------------------------------------------------
+def test_async_round_sync_conserves_and_drains():
+    ccfg = CollabConfig(num_classes=4, d_feature=3)
+    init_p, rs_async = train.make_async_round_sync(ccfg, d_max=2)
+    rs_sync = train.make_round_sync(ccfg)
+    mk_state = lambda: train.TrainState(None, None,
+                                        prototypes.init_state(4, 3),
+                                        jnp.zeros((), jnp.int32))
+    state, state_s = mk_state(), mk_state()
+    pending = init_p(4, 3)
+    rng = np.random.default_rng(0)
+    for r in range(7):                           # 5 rounds + 2 drain
+        if r < 5:
+            stats = prototypes.ProtoState(
+                jnp.asarray(rng.normal(size=(3, 4, 3)), jnp.float32),
+                jnp.asarray(rng.random((3, 4)), jnp.float32))
+            delays = jnp.asarray(rng.integers(0, 3, 3), jnp.int32)
+            state_s = rs_sync(state_s, stats)
+        else:
+            stats = prototypes.ProtoState(jnp.zeros((3, 4, 3)),
+                                          jnp.zeros((3, 4)))
+            delays = jnp.zeros((3,), jnp.int32)
+        state, pending = rs_async(state, pending, delays, stats)
+    np.testing.assert_allclose(np.asarray(state.proto.sum),
+                               np.asarray(state_s.proto.sum), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(state.proto.count),
+                               np.asarray(state_s.proto.count), atol=1e-5)
+    assert float(jnp.abs(pending.sum).max()) == 0.0   # fully drained
+
+    # d_max=0 degenerates to make_round_sync bit-exactly
+    init0, rs0 = train.make_async_round_sync(ccfg, d_max=0)
+    stats = prototypes.ProtoState(jnp.ones((3, 4, 3)), jnp.ones((3, 4)))
+    st0, _ = rs0(state_s, init0(4, 3), jnp.zeros((3,), jnp.int32), stats)
+    st1 = rs_sync(state_s, stats)
+    np.testing.assert_array_equal(np.asarray(st0.proto.sum),
+                                  np.asarray(st1.proto.sum))

@@ -159,6 +159,79 @@ def test_per_class_ring_wraparound(cap, k, C, seed):
             assert bool(valid[c, slot])
 
 
+@given(n=st.integers(1, 6), d_max=st.integers(1, 5), rounds=st.integers(2, 12),
+       seed=st.integers(0, 2**31 - 1))
+@settings(**SET)
+def test_event_log_commit_order_monotone_and_conserving(n, d_max, rounds,
+                                                        seed):
+    """Event-log invariants (relay/events.py): within every round's commit
+    set, birth rounds are nondecreasing (event order) with ties broken by
+    upload position; every upload commits exactly once, within d_max
+    rounds of its birth; and the host mirror drains completely."""
+    rng = np.random.default_rng(seed)
+    mirror = relay_lib.events.CommitMirror()
+    order = list(rng.permutation(n))             # arbitrary upload order
+    born, committed = 0, 0
+    for t in range(rounds + d_max):
+        active = t < rounds
+        mask = rng.random(n) < 0.6 if active else np.zeros(n, bool)
+        delays = rng.integers(0, d_max + 1, n)
+        born += int(mask.sum()) if active else 0
+        commits = mirror.step(t, mask, delays, order)
+        births = [b for b, _ in commits]
+        assert births == sorted(births)          # event order
+        pos = {c: i for i, c in enumerate(order)}
+        for (b1, c1), (b2, c2) in zip(commits, commits[1:]):
+            if b1 == b2:
+                assert pos[c1] < pos[c2]         # tie-break: upload pos
+        for b, _ in commits:
+            assert t - d_max <= b <= t           # bounded delay
+        committed += len(commits)
+    assert committed == born                     # exactly-once, drained
+
+
+@given(d_max=st.integers(1, 4), rounds=st.integers(1, 14),
+       seed=st.integers(0, 2**31 - 1))
+@settings(**SET)
+def test_pending_buffer_wraparound_at_dmax(d_max, rounds, seed):
+    """Pending-slot reuse is collision-free: slot j = birth mod D_max is
+    guaranteed free when round birth+D_max parks into it again, because the
+    previous occupant committed at most D_max rounds after ITS birth. Drive
+    the real array machinery (commit_and_park) with random masks/delays and
+    check no live entry is ever overwritten and the buffer drains."""
+    from repro.types import CollabConfig
+    rng = np.random.default_rng(seed)
+    N, C, d = 3, 2, 2
+    ccfg = CollabConfig(num_classes=C, d_feature=d, m_up=1, m_down=1)
+    pol = relay_lib.FlatRelay()
+    rstate = pol.init_state(ccfg, d, seed=0, capacity=8 * N)
+    pending = relay_lib.events.init_pending(N, d_max, 1, C, d)
+    owner = jnp.arange(N, dtype=jnp.int32)
+    for t in range(rounds + d_max):
+        active = t < rounds
+        mask = rng.random(N) < 0.7 if active else np.zeros(N, bool)
+        delays = rng.integers(0, d_max + 1, N)
+        live_before = np.asarray(pending.live)
+        commit_b = np.asarray(pending.commit)
+        # invariant: the slot about to be reused holds no entry that is
+        # still in flight BEYOND this round
+        slot = t % d_max
+        assert not (live_before[:, slot] & (commit_b[:, slot] > t)).any()
+        fresh = {"obs": jnp.asarray(rng.normal(size=(N, 1, C, d)),
+                                    jnp.float32),
+                 "valid": jnp.ones((N, C), bool),
+                 "psum": jnp.zeros((N, C, d)), "pcnt": jnp.ones((N, C)),
+                 "owner": owner}
+        rstate, pending = relay_lib.events.commit_and_park(
+            pol, rstate, pending, fresh, jnp.asarray(t, jnp.int32),
+            jnp.asarray(delays, jnp.int32), jnp.asarray(mask))
+        live = np.asarray(pending.live)
+        commit_a = np.asarray(pending.commit)
+        assert (commit_a[live] > t).all()        # live entries are future
+        assert (commit_a[live] <= t + d_max).all()
+    assert not np.asarray(pending.live).any()    # drained after the tail
+
+
 @given(cap=st.integers(1, 32), lam=st.floats(0.0, 4.0),
        seed=st.integers(0, 2**31 - 1))
 @settings(**SET)
