@@ -65,7 +65,7 @@ def make_trainer(mode: str, n_clients: int, *, lambda_kd: float = 10.0,
                  engine: str = "vec", batch_size: int = 32,
                  train_data=None, test_data=None, model: str = "cnn",
                  policy=None, participation=None, hetero: str = None,
-                 clock=None):
+                 clock=None, download_clock=None):
     """Build a trainer without running it. engine: "vec" (default — ALL
     benchmark fleets go through the vectorized engine, homogeneous ones as
     one fused round step and mixed ones bucketed; there is no seq
@@ -77,7 +77,10 @@ def make_trainer(mode: str, n_clients: int, *, lambda_kd: float = 10.0,
     participation-schedule specs forwarded to the trainer (see
     repro.relay.get_policy / get_schedule), e.g. policy="per_class",
     participation="uniform_k:8". clock: a repro.sim ClockModel spec (e.g.
-    "lognormal:4") driving the asynchronous event-ordered relay."""
+    "lognormal:4") driving the asynchronous event-ordered relay.
+    download_clock: a repro.sim download-lag spec (e.g. "lognormal:4") —
+    clients read stale relay snapshots from the bounded history ring
+    (repro.relay.history)."""
     if train_data is None or test_data is None:
         (x, y), test = data(seed)
     else:
@@ -106,7 +109,8 @@ def make_trainer(mode: str, n_clients: int, *, lambda_kd: float = 10.0,
     cls = (vec_collab.VectorizedCollabTrainer if engine == "vec"
            else collab.CollabTrainer)
     return cls(specs, params, parts, test, ccfg, tcfg, seed=seed,
-               policy=policy, schedule=participation, clock=clock)
+               policy=policy, schedule=participation, clock=clock,
+               download_clock=download_clock)
 
 
 def run_mode(mode: str, n_clients: int, rounds: int = None, *,

@@ -21,6 +21,7 @@ Model choice matters for what you measure:
       [--participation-sweep] [--participation-n 32] \
       [--hetero [--mix mlp:32,mlp:64] [--hetero-n 32]] \
       [--async-sweep [--async-n 32]] \
+      [--download-lag [--download-lag-n 32]] \
       [--ci-gate [--out BENCH_ci.json] [--floor benchmarks/ci_floor.json]]
 
 CSV to stdout: model,n_clients,engine,s_per_round,speedup_vs_seq.
@@ -47,9 +48,18 @@ jitted round step. The speedup column is vec-over-seq at the SAME D_max,
 so it tracks whether the async engine keeps its vectorization win.
 CSV: model,n_clients,d_max,engine,s_per_round,speedup_vs_seq.
 
+--download-lag measures the download-lag relay history
+(repro.relay.history + repro.sim download clocks): at fixed N, a lognormal
+download clock with D_max in {0, 1, 4} — clients read stale snapshots from
+a ring of H_max = D_max + 1 post-merge states. D_max=0 is the round-fresh
+fast path (baseline); larger D_max pays for the in-step snapshot gather +
+ring push, which should leave vec per-round cost ~flat in H_max.
+CSV: model,n_clients,dl_max,engine,s_per_round,speedup_vs_seq.
+
 --ci-gate is the CI benchmark-regression job (.github/workflows/ci.yml):
-run the tiny committed configs from benchmarks/ci_floor.json (N=8 MLP sync
-plus an async lognormal entry), write the measurements to BENCH_ci.json
+run the tiny committed configs from benchmarks/ci_floor.json (N=8 MLP
+sync, an async lognormal entry, and a download-lag entry), write the
+measurements to BENCH_ci.json
 (uploaded as a CI artifact), and exit 1 if any vec-over-seq per-round
 speedup falls below its committed floor. Re-baselining is documented in
 ci_floor.json itself and ROADMAP.md.
@@ -81,13 +91,14 @@ def time_rounds(trainer, rounds: int = 3) -> float:
 
 def bench(n_clients: int, engine: str, model: str, rounds: int,
           hetero: str = None, per_client: int = None,
-          clock: str = None) -> float:
+          clock: str = None, download_clock: str = None) -> float:
     pc = per_client or PER_CLIENT
     train = synthetic.class_images(pc * n_clients, seed=0, noise=0.8)
     test = synthetic.class_images(N_TEST, seed=99, noise=0.8)
     tr = common.make_trainer("cors", n_clients, engine=engine, model=model,
                              batch_size=16, train_data=train, test_data=test,
-                             hetero=hetero, clock=clock)
+                             hetero=hetero, clock=clock,
+                             download_clock=download_clock)
     return time_rounds(tr, rounds)
 
 
@@ -107,6 +118,31 @@ def async_sweep(n_clients: int = 32, rounds: int = 3, model: str = "mlp"):
         print(f"{model},{n_clients},{d_max},seq,{t_seq:.4f},1.00")
         print(f"{model},{n_clients},{d_max},vec,{t_vec:.4f},"
               f"{results[d_max]:.2f}")
+    return results
+
+
+def download_lag_sweep(n_clients: int = 32, rounds: int = 3,
+                       model: str = "mlp"):
+    """Download-lag relay history cost: vec vs seq per round at download
+    D_max in {0, 1, 4} (H_max = D_max + 1 retained snapshots) under a
+    lognormal download clock. D_max=0 is the round-fresh fast path
+    (baseline, no history machinery); D_max>0 threads the snapshot ring
+    through the jitted step — per-client stale reads are one batched
+    gather and the push one ring write, so vec per-round cost should stay
+    ~flat in H_max while the seq oracle keeps paying its O(N) dispatch
+    chain (mirroring the --async-sweep shape). The speedup column is
+    vec-over-seq at the SAME D_max.
+    CSV: model,n_clients,dl_max,engine,s_per_round,speedup_vs_seq."""
+    print("model,n_clients,dl_max,engine,s_per_round,speedup_vs_seq")
+    results = {}
+    for dl_max in (0, 1, 4):
+        dl = None if dl_max == 0 else f"lognormal:{dl_max}"
+        t_vec = bench(n_clients, "vec", model, rounds, download_clock=dl)
+        t_seq = bench(n_clients, "seq", model, rounds, download_clock=dl)
+        results[dl_max] = t_seq / t_vec
+        print(f"{model},{n_clients},{dl_max},seq,{t_seq:.4f},1.00")
+        print(f"{model},{n_clients},{dl_max},vec,{t_vec:.4f},"
+              f"{results[dl_max]:.2f}")
     return results
 
 
@@ -140,15 +176,19 @@ def ci_gate(out: str = "BENCH_ci.json",
     with open(floor_path) as f:
         floor = json.load(f)
     entries = [("sync", floor)] + [
-        (name, floor[name]) for name in ("async",) if name in floor]
+        (name, floor[name]) for name in ("async", "download_lag")
+        if name in floor]
     result, failed = {}, []
     for name, entry in entries:
         cfg = entry["config"]
         clock = cfg.get("clock")
+        dl = cfg.get("download_clock")
         t_vec = bench(cfg["n_clients"], "vec", cfg["model"], cfg["rounds"],
-                      per_client=cfg["per_client"], clock=clock)
+                      per_client=cfg["per_client"], clock=clock,
+                      download_clock=dl)
         t_seq = bench(cfg["n_clients"], "seq", cfg["model"], cfg["rounds"],
-                      per_client=cfg["per_client"], clock=clock)
+                      per_client=cfg["per_client"], clock=clock,
+                      download_clock=dl)
         speedup = t_seq / t_vec
         min_speedup = entry["min_speedup_vec_over_seq"]
         ok = speedup >= min_speedup
@@ -241,6 +281,12 @@ if __name__ == "__main__":
                          "vec vs seq")
     ap.add_argument("--async-n", type=int, default=32,
                     help="N for the async sweep")
+    ap.add_argument("--download-lag", action="store_true",
+                    help="measure the download-lag history ring (lognormal "
+                         "download clock, D_max in {0,1,4} i.e. H_max up "
+                         "to 5) vec vs seq")
+    ap.add_argument("--download-lag-n", type=int, default=32,
+                    help="N for the download-lag sweep")
     ap.add_argument("--ci-gate", action="store_true",
                     help="run the CI benchmark-regression gate (config + "
                          "floor from --floor; exit 1 below the floor)")
@@ -251,6 +297,8 @@ if __name__ == "__main__":
     args = ap.parse_args()
     if args.ci_gate:
         sys.exit(ci_gate(args.out, args.floor))
+    elif args.download_lag:
+        download_lag_sweep(args.download_lag_n, args.rounds, args.model)
     elif args.async_sweep:
         async_sweep(args.async_n, args.rounds, args.model)
     elif args.hetero:

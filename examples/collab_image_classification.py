@@ -48,6 +48,14 @@ def main():
                          "periodic[:dmax[,period]] — e.g. lognormal:4 is a "
                          "straggler fleet whose uploads commit up to 4 "
                          "rounds late, in event order")
+    ap.add_argument("--download-clock", default="none",
+                    help="download-lag clock (same spec zoo as "
+                         "--clock-model, independent randomness): clients "
+                         "read teachers and global prototypes from the "
+                         "relay snapshot of round t-d via the bounded "
+                         "history ring (src/repro/relay/history.py) — "
+                         "e.g. periodic:3,4 is a duty-cycled fleet "
+                         "training against up-to-3-round-stale syncs")
     ap.add_argument("--out", default="artifacts/collab_ckpt")
     args = ap.parse_args()
 
@@ -56,7 +64,8 @@ def main():
     parts = partition.uniform_split(x, y, args.clients, seed=1)
     print(f"{args.clients} clients × {len(parts[0][0])} samples each, "
           f"mode={args.mode}, relay={args.relay_policy}, "
-          f"participation={args.participation}, clock={args.clock_model}"
+          f"participation={args.participation}, clock={args.clock_model}, "
+          f"download={args.download_clock}"
           + (", hetero cnn/mlp fleet" if args.hetero else ""))
 
     cnn_spec = client_lib.ClientSpec(
@@ -82,13 +91,23 @@ def main():
     trainer = cls(specs, params, parts,
                   (tx, ty), ccfg, TrainConfig(batch_size=32), seed=0,
                   policy=args.relay_policy, schedule=args.participation,
-                  clock=args.clock_model)
+                  clock=args.clock_model,
+                  download_clock=args.download_clock)
     trainer.run(args.rounds, log_every=max(1, args.rounds // 15))
     late = sum(1 for h in trainer.history
                for b, _ in h.get("commits", []) if b < h["round"] - 1)
     if late:
         print(f"async relay: {late} uploads committed late "
               f"(event-ordered, see src/repro/relay/events.py)")
+    if trainer._lagged:    # download clock bound and mode downloads
+        stale = 0
+        for h in trainer.history:
+            dl = trainer.dl_clock.delays(h["round"] - 1, args.clients)
+            stale += sum(int(dl[i] > 0) for i in h["participants"])
+        if stale:
+            print(f"download lag: {stale} client-rounds trained against a "
+                  f"stale relay snapshot (history ring, see "
+                  f"src/repro/relay/history.py)")
 
     os.makedirs(args.out, exist_ok=True)
     for i in range(args.clients):

@@ -43,6 +43,22 @@ state at its sync (round start) — in-flight uploads are invisible, which
 is exactly what distinguishes the relay from SplitFed's synchronous
 server. `clock=None` (or D_max=0) is today's synchronous behavior,
 bit-identical.
+
+Download lag: pass `download_clock` (same `repro.sim` spec machinery,
+independent seed fold) and a client training in round t reads its teachers
+AND global prototypes from a snapshot `d(client, t)` rounds STALER than
+its round-start sync — the state its round-`t − d` self would have read
+fresh, i.e. the post-merge state of round `t − d − 1` (d = 0 is the
+round-start state itself) — the stale-sync half that the event log's late
+uploads don't model. This trainer keeps the last
+`H_max = d_max + 1` post-merge states in a host-side most-recent-first
+list, the exact replay of the vectorized engine's relay/history.py ring
+(every ring slot starts as the init state, so early deep reads see the
+Algorithm-1 init in both engines). Downlink is billed at READ — the bytes
+cross the wire when the snapshot is served, however stale it is — so the
+ledger is invariant under the delay map. `download_clock=None` (or
+d_max=0, delay 0 everywhere) is today's round-fresh download,
+bit-identical.
 """
 from __future__ import annotations
 
@@ -85,7 +101,8 @@ class CollabTrainer:
                  client_data: Sequence[Tuple[jax.Array, jax.Array]],
                  test_data: Tuple[jax.Array, jax.Array],
                  ccfg: CollabConfig, tcfg: TrainConfig, seed: int = 0,
-                 policy=None, schedule=None, clock=None):
+                 policy=None, schedule=None, clock=None,
+                 download_clock=None):
         assert len(specs) == len(params_list) == len(client_data)
         self.ccfg, self.tcfg = ccfg, tcfg
         self.clients = [
@@ -107,6 +124,16 @@ class CollabTrainer:
         self.server = relay_lib.RelayServer(ccfg, ccfg.d_feature, seed,
                                             n_clients=len(specs),
                                             policy=self.policy)
+        # Download lag (relay/history.py semantics, replayed host-side):
+        # `_snaps` is the bounded most-recent-first ring of post-merge
+        # relay states; a round-t client with download delay d reads
+        # _snaps[d] = the state as of round t − d. Only relay modes
+        # download, so only they carry the ring.
+        self.dl_clock = sim.get_download_clock(download_clock, seed=seed)
+        self._lagged = (self.dl_clock is not None
+                        and ccfg.mode in ("cors", "fd"))
+        self._h_max = (self.dl_clock.d_max + 1) if self._lagged else 1
+        self._snaps = [self.server.state] if self._lagged else None
         self.ledger = comm.CommLedger()
         self.key = jax.random.PRNGKey(seed)
         self._updaters = [client_lib.make_local_update(c.spec, ccfg, tcfg)
@@ -142,11 +169,16 @@ class CollabTrainer:
         delays = (self.clock.delays(r, N) if self.clock is not None
                   else np.zeros((N,), np.int64))
 
-        # phase 1 — downlink: every PRESENT client sees last round's state
+        # phase 1 — downlink: every PRESENT client sees last round's state,
+        # or — under a download clock — the post-merge snapshot from
+        # d(client, r) rounds before that (its last completed sync).
+        dl = (self.dl_clock.delays(r, N) if self._lagged
+              else np.zeros((N,), np.int64))
         teachers: Dict[int, Dict] = {}
         for i in present:
             teachers[i] = (self.server.relay(i, max(1, ccfg.m_down),
-                                             relay_ks[i])
+                                             relay_ks[i],
+                                             state=self._snapshot(int(dl[i])))
                            if mode in ("cors", "fd")
                            else client_lib.empty_teacher(ccfg))
 
@@ -193,8 +225,18 @@ class CollabTrainer:
                 [self.clients[i].params for i in present])
             for i in present:
                 self.clients[i].params = avg
+
+        # download-lag ring: snapshot the post-merge state EVERY round
+        # (unchanged on no-commit rounds — the snapshot still represents
+        # "the state as of round r"), exactly like the vectorized engine's
+        # unconditional history.push inside its round step.
+        if self._lagged:
+            self._snaps.insert(0, self.server.state)
+            del self._snaps[self._h_max:]
+
         up, down = comm.round_floats(
             mode, n_present=len(present), n_commit=len(commits),
+            n_read=len(present) if self._lagged else None,
             C=ccfg.num_classes,
             d=ccfg.d_feature, m_up=ccfg.m_up, m_down=ccfg.m_down,
             model_size=(baselines.num_params(self.clients[0].params)
@@ -220,6 +262,16 @@ class CollabTrainer:
                 print(f"  round {rec['round']:3d} acc {rec['acc_mean']:.4f}"
                       f" ±{rec['acc_std']:.4f}")
         return self.history
+
+    # ------------------------------------------------------------------
+    def _snapshot(self, d: int):
+        """Relay state as of `d` rounds ago (None = live state when no
+        download clock is bound). Clamped to the ring depth; entries past
+        the pushes performed so far resolve to the init state, which is
+        what the vectorized ring's never-written slots hold."""
+        if not self._lagged:
+            return None
+        return self._snaps[min(d, self._h_max - 1, len(self._snaps) - 1)]
 
     # ------------------------------------------------------------------
     def _eval_fn(self, spec: client_lib.ClientSpec):

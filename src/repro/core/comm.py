@@ -51,27 +51,34 @@ def sl_epoch_floats(n_samples: int, d: int, n_clients: int):
 
 def round_floats(mode: str, *, n_present: int, C: int = 0, d: int = 0,
                  m_up: int = 0, m_down: int = 0, model_size: int = 0,
-                 n_commit=None):
+                 n_commit=None, n_read=None):
     """Per-round (up, down) floats for any mode, billing only the clients
     that actually exchanged bytes this round. Shared by both engines so
     their ledgers agree bit-for-bit.
 
     Async billing (relay/events.py): an upload crosses the wire when it
-    COMMITS, a download when the client SYNCS (samples its teachers) — so
-    uplink floats are billed to the commit round (`n_commit` uploads
-    arrived this round, possibly born rounds ago) and downlink floats to
-    the sync round (`n_present` clients downloaded this round). n_commit
-    None means the synchronous fleet, where the two coincide."""
+    COMMITS, a download when the client READS — so uplink floats are
+    billed to the commit round (`n_commit` uploads arrived this round,
+    possibly born rounds ago) and downlink floats to the read round
+    (`n_read` clients fetched a snapshot this round). Under download lag
+    (relay/history.py) the snapshot a client reads may be rounds STALE,
+    but the bytes still cross the wire at read time, so `n_read` equals
+    the round's present-client count and total downlink is invariant
+    under any download-delay map — the conservation law the property
+    tests pin. n_commit / n_read None mean the synchronous fleet, where
+    commit, read and sync rounds all coincide."""
     if n_commit is None:
         n_commit = n_present
+    if n_read is None:
+        n_read = n_present
     if mode == "fedavg":
         return fedavg_round_floats(model_size, n_present)
     if mode == "cors":
         up, _ = cors_round_floats(C, d, m_up, m_down, n_commit)
-        _, down = cors_round_floats(C, d, m_up, m_down, n_present)
+        _, down = cors_round_floats(C, d, m_up, m_down, n_read)
         return up, down
     if mode == "fd":
         up, _ = fd_round_floats(C, n_commit)
-        _, down = fd_round_floats(C, n_present)
+        _, down = fd_round_floats(C, n_read)
         return up, down
     return 0.0, 0.0

@@ -70,6 +70,26 @@ so the async path runs full-width and off-mesh; `D_max = 0` keeps today's
 synchronous fast paths bit-identically. The sequential oracle replays the
 identical event order host-side and stays the bit-exact reference
 (tests/test_async_relay.py).
+
+Download lag: pass `download_clock` (the same `repro.sim` spec machinery,
+independent seed fold) and every client reads its teachers AND global
+prototypes from a snapshot `d(client, t)` rounds staler than its
+round-start sync — what its round-`t − d` self would have read fresh
+(d = 0 is the round-start state) — the stale-sync half of asynchrony,
+modeled by a bounded history ring of the last `H_max = d_max + 1` relay
+states (repro.relay.history). The ring
+is threaded through the SAME jitted round step: per-client snapshot reads
+are dynamic indices into the history axis (one batched gather, fused with
+the teacher-row gather) and the post-merge push happens at the end of the
+step, with `H_max` static and the per-round delay vector traced — one
+compile per (policy, schedule, clock spec), ever. Upload lag composes:
+under both clocks a client can distill against a stale snapshot while its
+own upload is still in flight, and because slot age is clock-derived
+(`clock − stamp`), the ages it sees are the snapshot's own — a stale
+download is automatically older by the time it is read. `H_max = 1` (or
+no download clock) is bit-identical to today's engines; the sequential
+oracle replays the ring host-side (tests/test_download_lag.py). Off-mesh
+only, like async (history-on-the-mesh is a ROADMAP follow-on).
 """
 from __future__ import annotations
 
@@ -97,12 +117,32 @@ def _stack(trees: Sequence[Any]):
 # homogeneous round step and the per-bucket heterogeneous steps are composed
 # from these, so the phase semantics exist in exactly one place.
 # ---------------------------------------------------------------------------
-def make_teacher_phase(policy: relay_lib.RelayPolicy, ccfg: CollabConfig):
+def make_teacher_phase(policy: relay_lib.RelayPolicy, ccfg: CollabConfig,
+                       lagged: bool = False):
     """Phase 1 (downlink): vmapped teacher sampling from the relay buffers
     for relay modes, a broadcast no-op teacher otherwise. Returns
-    `teachers(rstate, ids, relay_ks) -> teacher pytree (k, ...)`."""
+    `teachers(rstate, ids, relay_ks) -> teacher pytree (k, ...)`.
+
+    `lagged=True` is the download-lag variant: `teachers(hist, ids,
+    relay_ks, dl) `samples client i's teachers (and global prototypes)
+    from `history.read_at(hist, dl[i])` — its own post-merge snapshot from
+    dl[i] rounds ago. The per-client dynamic index into the history axis
+    happens INSIDE the vmapped sample, so it lowers to one batched gather
+    that XLA fuses with the teacher-row gather (no per-client state
+    copies), and `dl` is a traced argument — lag patterns never retrace."""
     mode = ccfg.mode
     m_down = max(1, ccfg.m_down)
+
+    if lagged:
+        assert mode in ("cors", "fd"), mode
+
+        def teachers_lagged(hist, ids, relay_ks, dl):
+            return jax.vmap(
+                lambda i, k, d: policy.sample_teacher(
+                    relay_lib.history.read_at(hist, d), i, m_down, k))(
+                        ids, relay_ks, dl)
+
+        return teachers_lagged
 
     def teachers(rstate, ids, relay_ks):
         if mode in ("cors", "fd"):
@@ -174,7 +214,7 @@ def make_upload_phase(spec: client_lib.ClientSpec, ccfg: CollabConfig):
     return uploads_of
 
 
-def make_relay_commit(policy: relay_lib.RelayPolicy):
+def make_relay_commit(policy: relay_lib.RelayPolicy, lagged: bool = False):
     """Phase 3b: the round's single relay write. `commit(rstate, payloads)`
     takes the per-bucket upload payloads (in bucket order), concatenates
     their observation rows, sums their prototype contributions, appends and
@@ -182,22 +222,31 @@ def make_relay_commit(policy: relay_lib.RelayPolicy):
     bucket-by-bucket: every policy's append writes rows in order and masked
     rows consume no slots, so per-bucket uploads COMPOSE. The bucket count
     and per-bucket row counts are fixed, so jitting this gives one trace —
-    and zero per-round eager concat/merge dispatches — for the whole run."""
+    and zero per-round eager concat/merge dispatches — for the whole run.
 
-    def commit(rstate, payloads):
+    `lagged=True`: `commit(rstate, payloads, hist)` additionally pushes the
+    post-merge state into the download-lag history ring and returns
+    `(rstate, hist)` (the zero-participant round, which skips this commit
+    entirely, pushes via a bare `history.push` in the engine instead)."""
+
+    def commit(rstate, payloads, *lag):
         cat = lambda k: jnp.concatenate([p[k] for p in payloads])
         proto = prototypes.merge(*[p["proto"] for p in payloads])
         logit = (prototypes.merge(*[p["logit"] for p in payloads])
                  if payloads[0]["logit"] is not None else None)
         new = policy.append(rstate, cat("obs_rows"), cat("valid_rows"),
                             cat("owner_rows"), cat("row_mask"))
-        return policy.merge_round(new, proto, logit)
+        new = policy.merge_round(new, proto, logit)
+        if lagged:
+            return new, relay_lib.history.push(lag[0], new)
+        return new
 
     return commit
 
 
 def make_async_round_step(spec: client_lib.ClientSpec, ccfg: CollabConfig,
-                          tcfg: TrainConfig, policy: relay_lib.RelayPolicy):
+                          tcfg: TrainConfig, policy: relay_lib.RelayPolicy,
+                          lagged: bool = False):
     """The homogeneous ASYNC round step (bounded-delay uploads,
     relay/events.py): phases 1-2 exactly as the synchronous step, then ONE
     `events.commit_and_park` — commit every due event (pending uploads
@@ -209,19 +258,27 @@ def make_async_round_step(spec: client_lib.ClientSpec, ccfg: CollabConfig,
 
     Returns a jitted `step(params, opt, rstate, pending, batches, data_x,
     data_y, ids, relay_ks, upd_ks, upl_ks, mask, delays, round_idx) ->
-    (params, opt, rstate, pending, metrics)`."""
+    (params, opt, rstate, pending, metrics)`.
+
+    `lagged=True` composes upload lag with DOWNLOAD lag: the step takes
+    two trailing args `(hist, dl)`, samples teachers from each client's
+    `t − dl[i]` snapshot, pushes the post-merge state into the ring, and
+    additionally returns the new history — so a stale download of a
+    delayed commit is exactly as old as the two clocks say."""
     mode = ccfg.mode
     assert mode in ("cors", "fd"), mode
     local_update = client_lib.make_local_update_fn(spec, ccfg, tcfg)
-    teachers = make_teacher_phase(policy, ccfg)
+    teachers = make_teacher_phase(policy, ccfg, lagged=lagged)
     per_client = make_client_upload_phase(spec, ccfg)
 
     def step(params, opt, rstate, pending, batches, data_x, data_y, ids,
-             relay_ks, upd_ks, upl_ks, mask, delays, round_idx):
-        # phases 1-2 — downlink from the round-start COMMITTED state (the
-        # client's last sync: in-flight uploads are invisible) + local
+             relay_ks, upd_ks, upl_ks, mask, delays, round_idx, *lag):
+        # phases 1-2 — downlink from the COMMITTED state of the client's
+        # last sync (round start, or dl[i] rounds earlier under download
+        # lag; in-flight uploads are invisible either way) + local
         # updates; absent clients freeze
-        teacher = teachers(rstate, ids, relay_ks)
+        teacher = (teachers(lag[0], ids, relay_ks, lag[1]) if lagged
+                   else teachers(rstate, ids, relay_ks))
         new_p, new_o, metrics = jax.vmap(local_update)(
             params, opt, batches, teacher, upd_ks)
         p_s = freeze_absent(mask, new_p, params)
@@ -232,23 +289,33 @@ def make_async_round_step(spec: client_lib.ClientSpec, ccfg: CollabConfig,
         fresh = per_client(p_s, data_x, data_y, upl_ks, ids)
         rstate, pending = relay_lib.events.commit_and_park(
             policy, rstate, pending, fresh, round_idx, delays, mask)
+        if lagged:
+            hist = relay_lib.history.push(lag[0], rstate)
+            return p_s, o_s, rstate, pending, hist, metrics
         return p_s, o_s, rstate, pending, metrics
 
     return jax.jit(step)
 
 
-def make_async_relay_commit(policy: relay_lib.RelayPolicy):
+def make_async_relay_commit(policy: relay_lib.RelayPolicy,
+                            lagged: bool = False):
     """Heterogeneous counterpart of `make_relay_commit` for the async
     engine: concatenate the buckets' PER-CLIENT payloads in bucket (=
     upload/event) order and run ONE `events.commit_and_park`. `delays` and
     `mask` arrive permuted to upload order, matching the concatenation and
-    the pending buffer's upload-position indexing."""
+    the pending buffer's upload-position indexing. `lagged=True` takes a
+    trailing history arg, pushes the post-merge state (this commit runs
+    EVERY round, so the ring advances even on no-commit rounds) and
+    returns it."""
 
-    def commit(rstate, pending, payloads, round_idx, delays, mask):
+    def commit(rstate, pending, payloads, round_idx, delays, mask, *lag):
         keys = [k for k in payloads[0] if payloads[0][k] is not None]
         fresh = {k: jnp.concatenate([p[k] for p in payloads]) for k in keys}
-        return relay_lib.events.commit_and_park(
+        rstate, pending = relay_lib.events.commit_and_park(
             policy, rstate, pending, fresh, round_idx, delays, mask)
+        if lagged:
+            return rstate, pending, relay_lib.history.push(lag[0], rstate)
+        return rstate, pending
 
     return commit
 
@@ -256,7 +323,8 @@ def make_async_relay_commit(policy: relay_lib.RelayPolicy):
 def make_bucket_update_step(spec: client_lib.ClientSpec, ccfg: CollabConfig,
                             tcfg: TrainConfig,
                             policy: relay_lib.RelayPolicy,
-                            per_client_payload: bool = False):
+                            per_client_payload: bool = False,
+                            lagged: bool = False):
     """One bucket's full-width masked round step against a FIXED relay
     state: downlink + local updates + upload payloads (phases 1-3a). The
     relay write (3b) is deliberately NOT here — the bucketed engine lets
@@ -269,16 +337,22 @@ def make_bucket_update_step(spec: client_lib.ClientSpec, ccfg: CollabConfig,
     ids, relay_ks, upd_ks, upl_ks, mask) -> (params, opt, metrics,
     payload)`; `payload` is None outside relay modes. The mask is a traced
     argument, so participation never retraces; one trace per bucket, ever.
+
+    `lagged=True` (download lag): the `rstate` slot receives the shared
+    history ring instead, plus a trailing `dl` arg — the bucket's clients
+    read their own `t − dl[j]` snapshots. History is read-only here; the
+    shared commit owns the push.
     """
     mode = ccfg.mode
     local_update = client_lib.make_local_update_fn(spec, ccfg, tcfg)
-    teachers = make_teacher_phase(policy, ccfg)
+    teachers = make_teacher_phase(policy, ccfg, lagged=lagged)
     uploads_of = make_upload_phase(spec, ccfg)
     uploads_per_client = make_client_upload_phase(spec, ccfg)
 
     def step(params, opt, rstate, batches, data_x, data_y, ids,
-             relay_ks, upd_ks, upl_ks, mask):
-        teacher = teachers(rstate, ids, relay_ks)
+             relay_ks, upd_ks, upl_ks, mask, *lag):
+        teacher = (teachers(rstate, ids, relay_ks, lag[0]) if lagged
+                   else teachers(rstate, ids, relay_ks))
         new_p, new_o, metrics = jax.vmap(local_update)(
             params, opt, batches, teacher, upd_ks)
         p_s = freeze_absent(mask, new_p, params)
@@ -352,7 +426,8 @@ class VectorizedCollabTrainer:
                  client_data: Sequence[Tuple[jax.Array, jax.Array]],
                  test_data: Tuple[jax.Array, jax.Array],
                  ccfg: CollabConfig, tcfg: TrainConfig, seed: int = 0,
-                 mesh=None, policy=None, schedule=None, clock=None):
+                 mesh=None, policy=None, schedule=None, clock=None,
+                 download_clock=None):
         if isinstance(specs, client_lib.ClientSpec):
             specs = [specs] * len(params_list)
         assert len(specs) == len(params_list) == len(client_data)
@@ -376,6 +451,20 @@ class VectorizedCollabTrainer:
                 f"all-gather redesign (ROADMAP). Got d_max="
                 f"{self.clock.d_max}; run async fleets off-mesh "
                 "(mesh=None) or use a D_max=0 clock.")
+        # Download lag (relay/history.py): only relay modes download, so
+        # only they carry the snapshot ring. Binding ANY download clock
+        # (even d_max=0, i.e. H_max=1) routes through the history
+        # machinery — the bit-compat probe the tests use.
+        self.dl_clock = sim.get_download_clock(download_clock, seed=seed)
+        self._lagged = (self.dl_clock is not None
+                        and ccfg.mode in ("cors", "fd"))
+        if self._lagged and mesh is not None:
+            raise ValueError(
+                "download-lag history is off-mesh: the snapshot ring is "
+                "replicated state and per-client stale reads under "
+                "shard_map need a history-on-the-mesh design (ROADMAP). "
+                f"Got download d_max={self.dl_clock.d_max}; run lagged "
+                "fleets off-mesh (mesh=None) or drop the download clock.")
         buckets = client_lib.bucketize(specs, params_list)
         self.bucket_ids: List[List[int]] = [ids for _, ids in buckets]
         self.hetero = len(buckets) > 1
@@ -412,6 +501,13 @@ class VectorizedCollabTrainer:
                 N, self.clock.d_max, ccfg.m_up, ccfg.num_classes,
                 ccfg.d_feature, fd=(ccfg.mode == "fd"))
             self._commit_mirror = relay_lib.events.CommitMirror()
+        if self._lagged:
+            self._h_max = self.dl_clock.d_max + 1
+            self.hist = relay_lib.history.init(self.relay_state, self._h_max)
+            # bare push for rounds whose relay commit is skipped entirely
+            # (zero-participant synchronous bucketed rounds): the ring
+            # still advances with the (unchanged) post-round state.
+            self._hist_push = jax.jit(relay_lib.history.push)
 
         if self.hetero:
             self._init_bucketed(buckets, params_list, client_data)
@@ -433,7 +529,8 @@ class VectorizedCollabTrainer:
                                       and not self._async)
                           else N)
         self._round_step = (
-            make_async_round_step(self.spec, ccfg, tcfg, self.policy)
+            make_async_round_step(self.spec, ccfg, tcfg, self.policy,
+                                  lagged=self._lagged)
             if self._async else self._make_round_step())
         self._eval_hits = make_eval_hits(self.spec)
 
@@ -473,13 +570,15 @@ class VectorizedCollabTrainer:
                 opt=opt, batches=batches, data_x=data_x, data_y=data_y,
                 step=make_bucket_update_step(
                     spec, self.ccfg, self.tcfg, self.policy,
-                    per_client_payload=self._async),
+                    per_client_payload=self._async,
+                    lagged=self._lagged),
                 eval_fn=make_eval_hits(spec)))
             for j, i in enumerate(ids):
                 self._client_slot[i] = (b, j)
         self._relay_commit = jax.jit(
-            make_async_relay_commit(self.policy) if self._async
-            else make_relay_commit(self.policy))
+            make_async_relay_commit(self.policy, lagged=self._lagged)
+            if self._async
+            else make_relay_commit(self.policy, lagged=self._lagged))
 
     # ------------------------------------------------------------------
     def client_params(self, i: int):
@@ -494,8 +593,9 @@ class VectorizedCollabTrainer:
         spec, ccfg, tcfg = self.spec, self.ccfg, self.tcfg
         N, mesh, policy = self.n_clients, self.mesh, self.policy
         mode = ccfg.mode
+        lagged = self._lagged                     # off-mesh only (guarded)
         local_update = client_lib.make_local_update_fn(spec, ccfg, tcfg)
-        teachers = make_teacher_phase(policy, ccfg)
+        teachers = make_teacher_phase(policy, ccfg, lagged=lagged)
         uploads_of = make_upload_phase(spec, ccfg)
         # Gather/scatter the participant block ONLY when it is a strict
         # subset: with k == N the idx is a runtime arange XLA cannot elide,
@@ -504,7 +604,12 @@ class VectorizedCollabTrainer:
         compact = mesh is None and self._k_active < N
 
         def round_core(params, opt, rstate, batches, data_x, data_y, ids,
-                       relay_ks, upd_ks, upl_ks, mask, idx):
+                       relay_ks, upd_ks, upl_ks, mask, idx, *lag):
+            # `lag` = (hist, dl) under a download clock (off-mesh): the
+            # snapshot ring and this round's (N,) download delays, both
+            # traced — the mesh path never sees them, so its in_specs are
+            # untouched.
+            hist, dl = lag if lagged else (None, None)
             # phase 0 — participant gather. Off-mesh the round runs on the
             # idx-selected (k, ...) block (identity permutation under full
             # participation); on-mesh each device keeps its full local
@@ -515,11 +620,13 @@ class VectorizedCollabTrainer:
                 dx, dy, ids_s = data_x[idx], data_y[idx], ids[idx]
                 rk, uk, ok = relay_ks[idx], upd_ks[idx], upl_ks[idx]
                 sub_mask = mask[idx]
+                dl_s = dl[idx] if lagged else None
             else:
                 p_s, o_s, b_s = params, opt, batches
                 dx, dy, ids_s = data_x, data_y, ids
                 rk, uk, ok = relay_ks, upd_ks, upl_ks
                 sub_mask = mask
+                dl_s = dl
             wf = sub_mask.astype(jnp.float32)
             n_present = jnp.sum(wf)
             if mesh is not None:
@@ -528,8 +635,10 @@ class VectorizedCollabTrainer:
 
             keep = lambda new, old: freeze_absent(sub_mask, new, old)
 
-            # phase 1 — downlink (vmapped relay sampling from the buffers)
-            teacher = teachers(rstate, ids_s, rk)
+            # phase 1 — downlink (vmapped relay sampling from the buffers;
+            # under download lag, from each client's own stale snapshot)
+            teacher = (teachers(hist, ids_s, rk, dl_s) if lagged
+                       else teachers(rstate, ids_s, rk))
 
             # phase 2 — all local updates in one vmap (Algorithm 2 × k)
             new_p, new_o, metrics = jax.vmap(local_update)(
@@ -583,6 +692,12 @@ class VectorizedCollabTrainer:
                                         m.dtype).at[idx].set(m), metrics)
             else:
                 params, opt, metrics_full = p_s, o_s, metrics
+            if lagged:
+                # ring advance is UNCONDITIONAL (unlike the relay write):
+                # a zero-participant round still snapshots the unchanged
+                # state, so "d rounds ago" always means rounds, not merges.
+                hist = relay_lib.history.push(hist, rstate)
+                return params, opt, rstate, hist, metrics_full
             return params, opt, rstate, metrics_full
 
         if mesh is None:
@@ -627,17 +742,27 @@ class VectorizedCollabTrainer:
                      else np.zeros((N,), np.int64))
         commits = self._round_commits(r, mask_np, delays_np)
         mask = jnp.asarray(mask_np)
+        # Download lag: this round's (N,) snapshot ages, traced like the
+        # upload delays — the lag pattern never retraces the step.
+        lag = ((self.hist,
+                jnp.asarray(self.dl_clock.delays(r, N), jnp.int32))
+               if self._lagged else ())
         if self._async:
             # Full-width async step: round_idx/delays are traced, so the
             # event timeline never retraces; the pending buffer threads
             # through like the relay state.
-            (self.params, self.opt_state, self.relay_state, self.pending,
-             metrics) = self._round_step(
+            out = self._round_step(
                 self.params, self.opt_state, self.relay_state, self.pending,
                 self.batches, self.data_x, self.data_y, ids,
                 relay_ks, upd_ks, upl_ks, mask,
                 jnp.asarray(delays_np, jnp.int32),
-                jnp.asarray(r, jnp.int32))
+                jnp.asarray(r, jnp.int32), *lag)
+            if self._lagged:
+                (self.params, self.opt_state, self.relay_state,
+                 self.pending, self.hist, metrics) = out
+            else:
+                (self.params, self.opt_state, self.relay_state,
+                 self.pending, metrics) = out
         else:
             if self.mesh is None and self._k_active < N:
                 idx_np = present                 # static-k compaction
@@ -647,14 +772,20 @@ class VectorizedCollabTrainer:
             else:
                 idx_np = np.arange(N)
             idx = jnp.asarray(idx_np, jnp.int32)
-            self.params, self.opt_state, self.relay_state, metrics = \
-                self._round_step(self.params, self.opt_state,
-                                 self.relay_state,
-                                 self.batches, self.data_x, self.data_y,
-                                 ids, relay_ks, upd_ks, upl_ks, mask, idx)
+            out = self._round_step(self.params, self.opt_state,
+                                   self.relay_state,
+                                   self.batches, self.data_x, self.data_y,
+                                   ids, relay_ks, upd_ks, upl_ks, mask, idx,
+                                   *lag)
+            if self._lagged:
+                (self.params, self.opt_state, self.relay_state, self.hist,
+                 metrics) = out
+            else:
+                self.params, self.opt_state, self.relay_state, metrics = out
 
         up, down = comm.round_floats(
             mode, n_present=int(present.size), n_commit=len(commits),
+            n_read=int(present.size) if self._lagged else None,
             C=ccfg.num_classes,
             d=ccfg.d_feature, m_up=ccfg.m_up, m_down=ccfg.m_down,
             model_size=(baselines.num_params(self.client_params(0))
@@ -683,32 +814,54 @@ class VectorizedCollabTrainer:
                      else np.zeros((N,), np.int64))
         commits = self._round_commits(r, mask_np, delays_np)
         rstate0 = self.relay_state
+        # Download lag: every bucket reads from the SAME shared history
+        # ring, each client indexing its own stale snapshot; delays sliced
+        # per bucket like the keys and the participation mask.
+        dl_np = (np.asarray(self.dl_clock.delays(r, N), np.int64)
+                 if self._lagged else None)
         payloads, metrics_parts = [], []
         for b in self.buckets:
             ids_j = jnp.asarray(b.ids, jnp.int32)
+            lag_b = ((jnp.asarray(dl_np[b.ids], jnp.int32),)
+                     if self._lagged else ())
             b.params, b.opt, metrics, payload = b.step(
-                b.params, b.opt, rstate0, b.batches, b.data_x, b.data_y,
+                b.params, b.opt,
+                self.hist if self._lagged else rstate0,
+                b.batches, b.data_x, b.data_y,
                 ids_j, relay_ks[b.ids], upd_ks[b.ids], upl_ks[b.ids],
-                jnp.asarray(mask_np[b.ids]))
+                jnp.asarray(mask_np[b.ids]), *lag_b)
             metrics_parts.append(metrics)
             payloads.append(payload)
 
+        hist_lag = (self.hist,) if self._lagged else ()
         if self._async:
             # The shared commit runs EVERY round: pending uploads can be
             # due even when nobody trains (and it no-ops when the commit
             # set is empty). mask/delays permuted to upload order, like
             # the concatenated payloads and the pending buffer.
             perm = self._upload_order
-            self.relay_state, self.pending = self._relay_commit(
+            out = self._relay_commit(
                 rstate0, self.pending, tuple(payloads),
                 jnp.asarray(r, jnp.int32),
                 jnp.asarray(delays_np[perm], jnp.int32),
-                jnp.asarray(mask_np[perm]))
+                jnp.asarray(mask_np[perm]), *hist_lag)
+            if self._lagged:
+                self.relay_state, self.pending, self.hist = out
+            else:
+                self.relay_state, self.pending = out
         elif mode in ("cors", "fd") and present.size:
-            self.relay_state = self._relay_commit(rstate0, tuple(payloads))
+            out = self._relay_commit(rstate0, tuple(payloads), *hist_lag)
+            if self._lagged:
+                self.relay_state, self.hist = out
+            else:
+                self.relay_state = out
+        elif self._lagged:
+            # relay untouched this round, but the ring still advances
+            self.hist = self._hist_push(self.hist, rstate0)
 
         up, down = comm.round_floats(
             mode, n_present=int(present.size), n_commit=len(commits),
+            n_read=int(present.size) if self._lagged else None,
             C=ccfg.num_classes,
             d=ccfg.d_feature, m_up=ccfg.m_up, m_down=ccfg.m_down)
         self.ledger.log_round(up, down)

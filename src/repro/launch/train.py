@@ -24,6 +24,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import sharding
 from repro.core import losses, prototypes
+from repro.relay import history as relay_history
 from repro.relay.participation import bcast_mask, freeze_absent
 from repro.models import encdec, lm
 from repro.optim import adam_init, adam_update
@@ -259,6 +260,47 @@ def make_async_round_sync(ccfg: CollabConfig, d_max: int):
         return state, pending
 
     return init_pending, round_sync
+
+
+def make_download_lag_round_sync(ccfg: CollabConfig, h_max: int):
+    """`make_round_sync` for a fleet whose clients READ stale prototypes
+    (repro.sim download clocks): the LM-scale counterpart of the relay
+    history ring (relay/history.py). The merge itself is unchanged — what
+    download lag needs is a bounded ring of the last `h_max` POST-MERGE
+    ProtoStates, so a client syncing in round t with download delay d can
+    be served the global prototypes as of round `t − d` instead of the
+    fresh ones.
+
+    Returns (init_history, round_sync, read_at):
+      init_history(C, d')        -> History ring seeded with the empty
+                                    ProtoState in every slot
+      round_sync(state, hist, *bucket_stats) -> (state, hist): the plain
+                                    merge, then push the post-merge proto
+      read_at(hist, delays)      -> ProtoState(s) as of `delays` rounds
+                                    ago; `delays` may be a scalar or — via
+                                    vmap — a per-client vector, traced
+                                    either way
+    Pure/jittable below init. `h_max = 1` retains only the current
+    post-merge proto, so delay-0 reads are bit-identical to
+    `make_round_sync` alone."""
+    assert h_max >= 1, h_max
+    sync = make_round_sync(ccfg)
+
+    def init_history(C: int, d_feature: int) -> relay_history.History:
+        return relay_history.init(prototypes.init_state(C, d_feature),
+                                  h_max)
+
+    def round_sync(state: TrainState, hist: relay_history.History,
+                   *bucket_stats: prototypes.ProtoState):
+        state = sync(state, *bucket_stats)
+        return state, relay_history.push(hist, state.proto)
+
+    def read_at(hist: relay_history.History, delays) -> prototypes.ProtoState:
+        if hasattr(delays, "ndim") and getattr(delays, "ndim", 0) > 0:
+            return jax.vmap(lambda d: relay_history.read_at(hist, d))(delays)
+        return relay_history.read_at(hist, delays)
+
+    return init_history, round_sync, read_at
 
 
 # ---------------------------------------------------------------------------

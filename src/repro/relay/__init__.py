@@ -6,6 +6,8 @@ Public surface:
     AdaptiveParticipation, via `get_schedule`
   - `relay.events`: the asynchronous event-ordered commit log (pending
     uploads, event ordering, clock stamps) driven by `repro.sim` clocks
+  - `relay.history`: the bounded post-merge snapshot ring for stale
+    (download-lag) teacher reads, driven by `repro.sim` download clocks
   - `RelayServer`: stateful wrapper for the sequential trainer
   - base contract + sentinels in `relay.base`
 """
@@ -13,7 +15,7 @@ from __future__ import annotations
 
 from typing import Union
 
-from repro.relay import events  # noqa: F401
+from repro.relay import events, history  # noqa: F401
 from repro.relay.base import (EMPTY_OWNER, SEED_OWNER, TEACHER_KEYS,
                               RelayPolicy, default_capacity)  # noqa: F401
 from repro.relay.flat import FlatRelay, RelayState  # noqa: F401

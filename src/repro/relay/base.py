@@ -52,6 +52,15 @@ round steps and used as dict keys. States are NamedTuple pytrees. Every state
 carries the shared prototype fields (`global_protos`, `valid_g`,
 `mean_logits`); `merge_protos` below implements that common part (including
 the clock tick).
+
+Snapshot contract: because states are fixed-shape array pytrees with no
+hidden host state, any policy's state can be stacked along a leading
+history axis and read back by dynamic index — that is all
+`repro.relay.history` (the download-lag snapshot ring) assumes, so every
+policy obeying this contract supports stale snapshot reads for free:
+`sample_teacher` runs unchanged on a `history.read_at` snapshot, and the
+ages it sees are the snapshot's own `clock − stamp` (a client reading a
+stale state sees the world exactly as it was at that clock).
 """
 from __future__ import annotations
 

@@ -1,0 +1,94 @@
+"""Bounded relay-state history ring — stale snapshot reads (download lag).
+
+The synchronous engines let every client download from the relay state of
+the PREVIOUS round — a round-fresh read. Real cross-device fleets don't get
+that: a duty-cycled phone trains against whatever snapshot it fetched at
+its last wake-up, possibly several rounds old. PR 4's event log made
+*uploads* late; this module is the symmetric half for *downloads*: keep the
+last `H_max` post-merge relay snapshots in a fixed-shape ring so a client
+training in round t can sample its teachers and global prototypes from a
+snapshot `d ≤ H_max − 1` rounds staler than its round-start sync — what
+its round-`t − d` self would have read fresh, i.e. the post-merge state of
+round `t − d − 1` (d = 0 is the round-start state itself).
+
+Layout: a `History` holds one stacked pytree — every leaf of the relay
+state gains a leading `(H_max,)` axis — plus a scalar `head` pointing at
+the MOST RECENT snapshot. This works for all three relay policies (and any
+future one obeying the base contract) because policy states are fixed-shape
+NamedTuple pytrees: stacking is policy-agnostic, and `read_at` returns a
+state of the original type that `sample_teacher` consumes unchanged.
+
+The functions below `init` are pure jax (jit/vmap-compatible, no
+data-dependent Python), so both engines share them:
+
+  - the vectorized engine threads the `History` through its ONE jitted
+    round step: each client's snapshot is a dynamic index into the history
+    axis (`read_at` under `vmap` lowers to a batched gather that XLA fuses
+    with the teacher-row gather — no per-client state copies, and `delay`
+    is a traced argument so lag patterns never retrace);
+  - the sequential oracle replays the same ring host-side (a bounded
+    most-recent-first list in `core/collab.py`) and stays the bit-exact
+    reference.
+
+Semantics pinned by tests/test_property.py:
+
+  - `push` evicts the oldest snapshot once the ring is full (wraparound at
+    `H_max`, like the event log's pending buffer at `D_max`);
+  - `read_at(hist, d)` returns EXACTLY the snapshot `d` pushes ago for
+    `d ≤ H_max − 1` (never a younger one), and clamps deeper requests to
+    the oldest retained snapshot (never older than `H_max − 1`);
+  - every slot starts as the INITIAL state, so a read that reaches past
+    the pushes performed so far sees the Algorithm-1 init state — exactly
+    what a client that never synced would hold.
+
+`H_max = 1` is the degenerate ring: the only retained snapshot is the
+current post-merge state, so delay-0 reads are bit-identical to the
+history-free engines (the acceptance anchor in tests/test_download_lag.py).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class History(NamedTuple):
+    """snaps: the stacked snapshot pytree — every leaf (H_max, ...);
+    head: () int32 — ring slot of the most recent snapshot."""
+    snaps: Any
+    head: jax.Array
+
+    @property
+    def h_max(self) -> int:
+        return jax.tree.leaves(self.snaps)[0].shape[0]
+
+
+def init(snapshot, h_max: int) -> History:
+    """Ring of `h_max` copies of `snapshot` (host-side; run once). Every
+    slot holds the initial state so early deep reads are well-defined."""
+    assert h_max >= 1, h_max
+    snaps = jax.tree.map(
+        lambda a: jnp.repeat(jnp.asarray(a)[None], h_max, axis=0), snapshot)
+    return History(snaps=snaps, head=jnp.zeros((), jnp.int32))
+
+
+def push(hist: History, snapshot) -> History:
+    """Append a post-merge snapshot, evicting the oldest. Pure; called once
+    per round INSIDE the engines' jitted round steps."""
+    h = hist.h_max
+    head = jnp.mod(hist.head + 1, h).astype(jnp.int32)
+    snaps = jax.tree.map(lambda buf, a: buf.at[head].set(a),
+                         hist.snaps, snapshot)
+    return History(snaps=snaps, head=head)
+
+
+def read_at(hist: History, delay):
+    """The snapshot `delay` pushes ago (0 = most recent), clamped to the
+    ring depth: requests past `H_max − 1` return the oldest retained
+    snapshot. `delay` may be traced; under `vmap` this is one batched
+    gather over the history axis."""
+    h = hist.h_max
+    d = jnp.clip(jnp.asarray(delay).astype(jnp.int32), 0, h - 1)
+    slot = jnp.mod(hist.head - d, h)
+    return jax.tree.map(lambda buf: buf[slot], hist.snaps)

@@ -71,8 +71,14 @@ class RelayServer:
             self.state = self.policy.merge_round(self.state, merged, logit)
 
     # -- downlink ----------------------------------------------------------
-    def relay(self, client_id: int, m_down: int, key) -> Dict:
-        return _sample_teacher_jit(self.policy, self.state,
+    def relay(self, client_id: int, m_down: int, key, state=None) -> Dict:
+        """Sample a teacher for `client_id`. `state` (default: the live
+        state) lets the download-lag oracle read from a HISTORICAL
+        snapshot (core/collab.py keeps the host-side ring of post-merge
+        states, mirroring relay/history.py): snapshots share the live
+        state's shapes, so the jitted sampler never retraces."""
+        return _sample_teacher_jit(self.policy,
+                                   self.state if state is None else state,
                                    jnp.asarray(client_id, jnp.int32),
                                    m_down, key)
 

@@ -4,7 +4,11 @@ The paper targets cross-device fleets whose clients are slow, flaky and
 never synchronized. `repro.sim` models that WITHOUT real wall-clock time:
 a `ClockModel` is a pure function `(client_id, round_idx) -> commit delay`
 (in rounds, bounded by `d_max`), consumed by both collaborative engines to
-drive the asynchronous event-ordered relay (repro.relay.events).
+drive the asynchronous event-ordered relay (repro.relay.events) — and, via
+`get_download_clock`, the download-lag snapshot reads from the relay
+history ring (repro.relay.history).
 """
 from repro.sim.clocks import (ClockModel, HomogeneousClock,  # noqa: F401
-                              LognormalClock, PeriodicClock, get_clock)
+                              LognormalClock, PeriodicClock,
+                              PeriodicSyncClock,
+                              get_clock, get_download_clock)

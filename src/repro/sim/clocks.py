@@ -128,3 +128,54 @@ def get_clock(spec, seed: int = 0):
         return PeriodicClock(d_max=int(args[0]) if args else 4,
                              period=int(args[1]) if len(args) > 1 else 3)
     raise ValueError(f"unknown clock model: {spec!r}")
+
+
+@dataclass(frozen=True)
+class PeriodicSyncClock(ClockModel):
+    """Duty-cycled DOWNLOAD staleness — the time-forward mirror of
+    `PeriodicClock`: client i last completed a sync at its most recent
+    window (phase i mod period), so the snapshot it trains against in
+    round t is `(t − i) mod period` rounds stale — age GROWS 0, 1, ...,
+    period−1 between windows and resets at the next sync, capped at
+    d_max. (`PeriodicClock`'s rounds-UNTIL-next-window delay is correct
+    for uploads but would make a downloader's observed history run
+    backwards in time.)"""
+    d_max: int = 4
+    period: int = 3
+    name: str = "periodic_sync"
+
+    def __post_init__(self):
+        assert self.period > 0 and self.d_max >= 0
+
+    def delays(self, round_idx: int, n_clients: int) -> np.ndarray:
+        i = np.arange(n_clients)
+        since = (round_idx - i) % self.period    # rounds since last window
+        return np.minimum(since, self.d_max).astype(np.int64)
+
+
+# Seed fold separating the download-lag clock from the upload clock: the
+# same seed (and even the same spec string) must yield DECORRELATED upload
+# and download lateness — a device's radio being busy on the uplink says
+# nothing about how stale its last sync is.
+_DOWNLOAD_SEED_FOLD = 0xD1
+
+
+def get_download_clock(spec, seed: int = 0):
+    """Parse a DOWNLOAD-lag clock: same model zoo and spec strings as
+    `get_clock`, but entry i of `delays(t, N)` is how many rounds STALE
+    client i's relay snapshot is when it trains in round t — it reads the
+    snapshot its round-`t − d` self would have read fresh (the post-merge
+    state of round `t − d − 1`, via the relay history ring,
+    repro.relay.history). `d_max` bounds the lag, so engines retain
+    `H_max = d_max + 1` snapshots; delay 0 (or None) is today's
+    round-fresh download. A ClockModel instance passes through unchanged;
+    string specs are seeded through an independent fold so upload and
+    download clocks built from one seed decorrelate, and "periodic"
+    resolves to `PeriodicSyncClock` (rounds SINCE the last sync window —
+    staleness must grow between syncs, not count down)."""
+    if isinstance(spec, ClockModel):
+        return spec
+    c = get_clock(spec, seed=seed ^ _DOWNLOAD_SEED_FOLD)
+    if isinstance(c, PeriodicClock):
+        return PeriodicSyncClock(d_max=c.d_max, period=c.period)
+    return c

@@ -1,0 +1,25 @@
+"""Shared pytest configuration.
+
+- Keeps this directory on sys.path (pytest rootdir insertion), so suites
+  import the consolidated oracle helpers as `from oracles import ...`.
+- Pins a fixed hypothesis profile: DERANDOMIZED (examples derive from the
+  test body, not a per-run RNG seed) with a bounded example budget, so
+  tier-1 and the CI matrix are deterministic and fast. Individual tests
+  may still override budget/deadline via @settings; derandomization stays.
+  Override the budget with HYPOTHESIS_MAX_EXAMPLES for a deeper local run.
+- The `slow` marker (registered in pyproject.toml, deselected by default
+  via addopts) holds the heavy cross-product matrices — run them with
+  `-m slow` (the separate non-blocking CI job does).
+"""
+import os
+
+try:
+    from hypothesis import settings
+
+    settings.register_profile(
+        "repro-ci", derandomize=True,
+        max_examples=int(os.environ.get("HYPOTHESIS_MAX_EXAMPLES", "25")),
+        deadline=None)
+    settings.load_profile("repro-ci")
+except ImportError:        # hypothesis is dev-only; property tests skip
+    pass

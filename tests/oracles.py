@@ -1,0 +1,55 @@
+"""Shared seq/vec oracle assertions.
+
+One definition of "the engines agree", imported by every equivalence suite
+(test_relay_policies / test_hetero_bucketed / test_async_relay /
+test_download_lag) instead of three drifting copies: ring and clock
+bookkeeping must be EXACT — same pointers, owners, validity, birth stamps,
+server clock and (where the policy tracks it) ages — while observations
+and prototypes are float-tolerant, because the vmap-batched local updates
+associate float reductions differently than the per-client oracle loop.
+Ledger equality is exact: both engines bill through the same
+`comm.round_floats`, so a single float of drift is a billing bug.
+"""
+import numpy as np
+
+# Ring/clock fields every relay state carries and must match bit-for-bit.
+EXACT_FIELDS = ("ptr", "owner", "valid", "stamp", "clock")
+
+
+def assert_states_match(ss, vs, obs_atol=5e-3):
+    """Exact ptr/owner/valid/stamp/clock (+age) equality; obs and
+    global prototypes within `obs_atol`."""
+    for f in EXACT_FIELDS:
+        np.testing.assert_array_equal(np.asarray(getattr(ss, f)),
+                                      np.asarray(getattr(vs, f)),
+                                      err_msg=f)
+    if hasattr(ss, "age"):
+        np.testing.assert_array_equal(np.asarray(ss.age), np.asarray(vs.age),
+                                      err_msg="age")
+    np.testing.assert_allclose(np.asarray(ss.obs), np.asarray(vs.obs),
+                               atol=obs_atol)
+    np.testing.assert_allclose(np.asarray(ss.global_protos),
+                               np.asarray(vs.global_protos), atol=obs_atol)
+    np.testing.assert_array_equal(np.asarray(ss.valid_g),
+                                  np.asarray(vs.valid_g))
+
+
+def assert_ledgers_equal(a, b):
+    """Bit-exact comm-ledger agreement: per-round floats and totals."""
+    assert a.by_round == b.by_round
+    assert a.up_floats == b.up_floats
+    assert a.down_floats == b.down_floats
+    assert a.total_bytes == b.total_bytes
+
+
+def run_matched(seq, vec, rounds=3, acc_atol=2e-2):
+    """Advance a sequential oracle and a vectorized engine in lockstep:
+    identical participants and commit lists every round, accuracies within
+    `acc_atol`, then exact ledger and relay-state agreement at the end."""
+    for _ in range(rounds):
+        rs, rv = seq.run_round(), vec.run_round()
+        assert rs["participants"] == rv["participants"]
+        assert rs["commits"] == rv["commits"]
+        np.testing.assert_allclose(rs["accs"], rv["accs"], atol=acc_atol)
+    assert_ledgers_equal(seq.ledger, vec.ledger)
+    assert_states_match(seq.server.state, vec.relay_state)

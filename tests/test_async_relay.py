@@ -15,6 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from oracles import run_matched as _run_matched
 from repro import relay as relay_lib, sim
 from repro.core import client as client_lib, collab, prototypes, vec_collab
 from repro.data import partition, synthetic
@@ -54,33 +55,6 @@ def _build(engine, policy, clock, schedule=None, mode="cors", n_clients=4,
            else vec_collab.VectorizedCollabTrainer)
     return cls(specs, params, parts, (tx, ty), ccfg, tcfg, seed=seed,
                policy=policy, schedule=schedule, clock=clock)
-
-
-def _assert_states_match(ss, vs):
-    """Ring/clock bookkeeping must be EXACT; observations float-tolerant
-    (vmap-batched update association)."""
-    for f in ("ptr", "owner", "valid", "stamp", "clock"):
-        np.testing.assert_array_equal(np.asarray(getattr(ss, f)),
-                                      np.asarray(getattr(vs, f)),
-                                      err_msg=f)
-    if hasattr(ss, "age"):
-        np.testing.assert_array_equal(np.asarray(ss.age), np.asarray(vs.age))
-    np.testing.assert_allclose(np.asarray(ss.obs), np.asarray(vs.obs),
-                               atol=5e-3)
-    np.testing.assert_allclose(np.asarray(ss.global_protos),
-                               np.asarray(vs.global_protos), atol=5e-3)
-    np.testing.assert_array_equal(np.asarray(ss.valid_g),
-                                  np.asarray(vs.valid_g))
-
-
-def _run_matched(seq, vec, rounds=3):
-    for _ in range(rounds):
-        rs, rv = seq.run_round(), vec.run_round()
-        assert rs["participants"] == rv["participants"]
-        assert rs["commits"] == rv["commits"]
-        np.testing.assert_allclose(rs["accs"], rv["accs"], atol=2e-2)
-    assert seq.ledger.by_round == vec.ledger.by_round
-    _assert_states_match(seq.server.state, vec.relay_state)
 
 
 # ---------------------------------------------------------------------------

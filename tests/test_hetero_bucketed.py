@@ -14,6 +14,7 @@ import jax
 import numpy as np
 import pytest
 
+from oracles import assert_states_match as _assert_states_match
 from repro import relay as relay_lib
 from repro.core import client as client_lib, collab, vec_collab
 from repro.data import partition, synthetic
@@ -66,22 +67,6 @@ def _build(engine, policy, schedule, mode="cors", n_clients=4, n=256,
            else vec_collab.VectorizedCollabTrainer)
     return cls(specs, params, parts, (tx, ty), ccfg, tcfg, seed=seed,
                policy=policy, schedule=schedule)
-
-
-def _assert_states_match(ss, vs):
-    """Ring bookkeeping must be EXACT; observations are float-tolerant
-    (vmap-batched update association)."""
-    np.testing.assert_array_equal(np.asarray(ss.ptr), np.asarray(vs.ptr))
-    np.testing.assert_array_equal(np.asarray(ss.owner), np.asarray(vs.owner))
-    np.testing.assert_array_equal(np.asarray(ss.valid), np.asarray(vs.valid))
-    if hasattr(ss, "age"):
-        np.testing.assert_array_equal(np.asarray(ss.age), np.asarray(vs.age))
-    np.testing.assert_allclose(np.asarray(ss.obs), np.asarray(vs.obs),
-                               atol=5e-3)
-    np.testing.assert_allclose(np.asarray(ss.global_protos),
-                               np.asarray(vs.global_protos), atol=5e-3)
-    np.testing.assert_array_equal(np.asarray(ss.valid_g),
-                                  np.asarray(vs.valid_g))
 
 
 # ---------------------------------------------------------------------------

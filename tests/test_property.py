@@ -232,6 +232,56 @@ def test_pending_buffer_wraparound_at_dmax(d_max, rounds, seed):
     assert not np.asarray(pending.live).any()    # drained after the tail
 
 
+@given(h_max=st.integers(1, 5), pushes=st.integers(0, 12),
+       d=st.integers(0, 8))
+@settings(**SET)
+def test_history_ring_wraparound_at_hmax(h_max, pushes, d):
+    """History-ring invariants (relay/history.py): `read_at(d)` returns
+    EXACTLY the snapshot d pushes ago for d <= H_max−1 — never a younger
+    one — and clamps deeper requests to the oldest retained snapshot
+    (never older than H_max−1). Slots the run has not reached yet resolve
+    to the init snapshot, the state a never-synced client would hold."""
+    from repro.relay import history
+    snap = lambda v: {"v": jnp.full((2,), v, jnp.float32)}
+    hist = history.init(snap(0.0), h_max)
+    for t in range(1, pushes + 1):
+        hist = history.push(hist, snap(float(t)))
+    dd = min(d, h_max - 1)                        # the documented clamp
+    expect = max(pushes - dd, 0)                  # 0 = the init snapshot
+    got = np.asarray(history.read_at(hist, jnp.asarray(d))["v"])
+    np.testing.assert_array_equal(got, float(expect))
+    assert hist.h_max == h_max                    # ring never grows
+
+
+@given(rounds=st.integers(1, 8), N=st.integers(1, 6),
+       seed=st.integers(0, 2**31 - 1))
+@settings(**SET)
+def test_downlink_billing_conserved_under_delay_maps(rounds, N, seed):
+    """Downlink is billed at READ (core/comm.py): a present client fetches
+    one snapshot per round no matter how stale it is, so for the same
+    participation masks ANY two download-delay maps produce bit-identical
+    per-round ledgers, and total downlink floats equal
+    Σ_t |present_t| · (M_↓+1)·C·d'. Pins the billing point against a
+    regression toward billing at snapshot age."""
+    rng = np.random.default_rng(seed)
+    masks = rng.random((rounds, N)) < 0.6
+    C, d, m_up, m_down = 5, 3, 1, 2
+    per_down = (m_down + 1) * C * d
+    ledgers = []
+    for _ in range(2):                  # two arbitrary delay maps
+        _delays = rng.integers(0, 4, (rounds, N))   # never enters billing
+        led = comm.CommLedger()
+        for t in range(rounds):
+            n_present = int(masks[t].sum())
+            up, down = comm.round_floats(
+                "cors", n_present=n_present, C=C, d=d, m_up=m_up,
+                m_down=m_down, n_read=n_present)
+            led.log_round(up, down)
+        assert led.down_floats == per_down * int(masks.sum())
+        ledgers.append(led)
+    assert ledgers[0].by_round == ledgers[1].by_round
+
+
 @given(cap=st.integers(1, 32), lam=st.floats(0.0, 4.0),
        seed=st.integers(0, 2**31 - 1))
 @settings(**SET)
