@@ -8,7 +8,7 @@ import jax
 from repro.core import client as client_lib, collab, vec_collab
 from repro.data import partition, synthetic
 from repro.models import cnn, mlp
-from repro.types import CollabConfig, TrainConfig
+from repro.types import CollabConfig, FleetConfig, TrainConfig
 
 ROUNDS = int(os.environ.get("REPRO_BENCH_ROUNDS", "12"))
 N_TRAIN = int(os.environ.get("REPRO_BENCH_TRAIN", "1200"))
@@ -65,7 +65,7 @@ def make_trainer(mode: str, n_clients: int, *, lambda_kd: float = 10.0,
                  engine: str = "vec", batch_size: int = 32,
                  train_data=None, test_data=None, model: str = "cnn",
                  policy=None, participation=None, hetero: str = None,
-                 clock=None, download_clock=None):
+                 clock=None, download_clock=None, mesh=None, fleet=None):
     """Build a trainer without running it. engine: "vec" (default — ALL
     benchmark fleets go through the vectorized engine, homogeneous ones as
     one fused round step and mixed ones bucketed; there is no seq
@@ -80,7 +80,11 @@ def make_trainer(mode: str, n_clients: int, *, lambda_kd: float = 10.0,
     "lognormal:4") driving the asynchronous event-ordered relay.
     download_clock: a repro.sim download-lag spec (e.g. "lognormal:4") —
     clients read stale relay snapshots from the bounded history ring
-    (repro.relay.history)."""
+    (repro.relay.history). mesh: a jax Mesh with a "clients" axis — the
+    placement-aware device path (repro.relay.placement). fleet: pass a
+    ready-made `repro.types.FleetConfig` instead of the loose
+    policy/participation/clock/download_clock/mesh kwargs (mixing both is
+    an error, mirroring `resolve_fleet`)."""
     if train_data is None or test_data is None:
         (x, y), test = data(seed)
     else:
@@ -108,9 +112,17 @@ def make_trainer(mode: str, n_clients: int, *, lambda_kd: float = 10.0,
         params = [cnn.init_cnn(k, width=width) for k in keys]
     cls = (vec_collab.VectorizedCollabTrainer if engine == "vec"
            else collab.CollabTrainer)
+    loose = {"policy": policy, "participation": participation,
+             "clock": clock, "download_clock": download_clock, "mesh": mesh}
+    loose = {k: v for k, v in loose.items() if v is not None}
+    if fleet is None:
+        fleet = FleetConfig(**loose)
+    elif loose:
+        raise ValueError(
+            f"pass fleet=FleetConfig(...) OR loose kwargs, not both; got "
+            f"fleet and {sorted(loose)}")
     return cls(specs, params, parts, test, ccfg, tcfg, seed=seed,
-               policy=policy, schedule=participation, clock=clock,
-               download_clock=download_clock)
+               fleet=fleet)
 
 
 def run_mode(mode: str, n_clients: int, rounds: int = None, *,

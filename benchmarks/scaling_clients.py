@@ -91,14 +91,19 @@ def time_rounds(trainer, rounds: int = 3) -> float:
 
 def bench(n_clients: int, engine: str, model: str, rounds: int,
           hetero: str = None, per_client: int = None,
-          clock: str = None, download_clock: str = None) -> float:
+          clock: str = None, download_clock: str = None,
+          mesh_devices: int = 0) -> float:
     pc = per_client or PER_CLIENT
     train = synthetic.class_images(pc * n_clients, seed=0, noise=0.8)
     test = synthetic.class_images(N_TEST, seed=99, noise=0.8)
+    mesh = None
+    if mesh_devices and engine == "vec":
+        from repro import sharding
+        mesh = sharding.client_mesh(mesh_devices)
     tr = common.make_trainer("cors", n_clients, engine=engine, model=model,
                              batch_size=16, train_data=train, test_data=test,
                              hetero=hetero, clock=clock,
-                             download_clock=download_clock)
+                             download_clock=download_clock, mesh=mesh)
     return time_rounds(tr, rounds)
 
 
@@ -167,28 +172,67 @@ def hetero_sweep(n_clients: int = 32, rounds: int = 3,
     return speedup
 
 
+def _measure_entry(cfg) -> tuple:
+    """(t_vec, t_seq) for one gate entry config. A "devices" key runs the
+    vec side on a forced multi-device mesh (the placement path,
+    repro.relay.placement); the seq oracle is meshless either way."""
+    kw = dict(per_client=cfg["per_client"], clock=cfg.get("clock"),
+              download_clock=cfg.get("download_clock"))
+    t_vec = bench(cfg["n_clients"], "vec", cfg["model"], cfg["rounds"],
+                  mesh_devices=int(cfg.get("devices", 0)), **kw)
+    t_seq = bench(cfg["n_clients"], "seq", cfg["model"], cfg["rounds"], **kw)
+    return t_vec, t_seq
+
+
+def _probe_subprocess(name: str, floor_path: str, devices: int) -> tuple:
+    """Re-run ONE gate entry in a child interpreter with XLA forced to
+    `devices` virtual host devices (the flag must be set before the first
+    jax import, so the parent process cannot measure it itself)."""
+    import subprocess
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        f" --xla_force_host_platform_device_count={devices}"
+                        ).strip()
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.scaling_clients",
+         "--gate-probe", name, "--floor", floor_path],
+        env=env, capture_output=True, text=True, check=True)
+    probe = json.loads(out.stdout.strip().splitlines()[-1])
+    return probe["t_vec"], probe["t_seq"]
+
+
+def gate_probe(name: str, floor_path: str) -> int:
+    """Child side of _probe_subprocess: measure one entry, print JSON."""
+    with open(floor_path) as f:
+        floor = json.load(f)
+    cfg = (floor if name == "sync" else floor[name])["config"]
+    t_vec, t_seq = _measure_entry(cfg)
+    print(json.dumps({"t_vec": t_vec, "t_seq": t_seq}))
+    return 0
+
+
 def ci_gate(out: str = "BENCH_ci.json",
             floor_path: str = "benchmarks/ci_floor.json") -> int:
     """The CI benchmark-regression gate. Measures every committed tiny
     config (the synchronous top-level entry plus any named extra entries,
-    e.g. "async") and fails (exit 1) when any vec-over-seq speedup drops
+    e.g. "async", or "mesh" — the placement path on forced virtual
+    devices) and fails (exit 1) when any vec-over-seq speedup drops
     below its committed floor."""
+    import jax
     with open(floor_path) as f:
         floor = json.load(f)
     entries = [("sync", floor)] + [
-        (name, floor[name]) for name in ("async", "download_lag")
+        (name, floor[name]) for name in ("async", "download_lag", "mesh")
         if name in floor]
     result, failed = {}, []
     for name, entry in entries:
         cfg = entry["config"]
-        clock = cfg.get("clock")
-        dl = cfg.get("download_clock")
-        t_vec = bench(cfg["n_clients"], "vec", cfg["model"], cfg["rounds"],
-                      per_client=cfg["per_client"], clock=clock,
-                      download_clock=dl)
-        t_seq = bench(cfg["n_clients"], "seq", cfg["model"], cfg["rounds"],
-                      per_client=cfg["per_client"], clock=clock,
-                      download_clock=dl)
+        devices = int(cfg.get("devices", 0))
+        if devices > jax.local_device_count():
+            t_vec, t_seq = _probe_subprocess(name, floor_path, devices)
+        else:
+            t_vec, t_seq = _measure_entry(cfg)
         speedup = t_seq / t_vec
         min_speedup = entry["min_speedup_vec_over_seq"]
         ok = speedup >= min_speedup
@@ -294,7 +338,11 @@ if __name__ == "__main__":
                     help="ci-gate: where to write the measurement JSON")
     ap.add_argument("--floor", default="benchmarks/ci_floor.json",
                     help="ci-gate: committed config + speedup floor")
+    ap.add_argument("--gate-probe", default=None, metavar="ENTRY",
+                    help=argparse.SUPPRESS)   # ci_gate internal (subprocess)
     args = ap.parse_args()
+    if args.gate_probe:
+        sys.exit(gate_probe(args.gate_probe, args.floor))
     if args.ci_gate:
         sys.exit(ci_gate(args.out, args.floor))
     elif args.download_lag:

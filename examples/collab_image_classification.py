@@ -13,7 +13,7 @@ from repro.checkpoint import save_pytree
 from repro.core import client as client_lib, collab, vec_collab
 from repro.data import partition, synthetic
 from repro.models import cnn, mlp
-from repro.types import CollabConfig, TrainConfig
+from repro.types import CollabConfig, FleetConfig, TrainConfig
 
 
 def main():
@@ -90,9 +90,10 @@ def main():
            else collab.CollabTrainer)
     trainer = cls(specs, params, parts,
                   (tx, ty), ccfg, TrainConfig(batch_size=32), seed=0,
-                  policy=args.relay_policy, schedule=args.participation,
-                  clock=args.clock_model,
-                  download_clock=args.download_clock)
+                  fleet=FleetConfig(policy=args.relay_policy,
+                                    participation=args.participation,
+                                    clock=args.clock_model,
+                                    download_clock=args.download_clock))
     trainer.run(args.rounds, log_every=max(1, args.rounds // 15))
     late = sum(1 for h in trainer.history
                for b, _ in h.get("commits", []) if b < h["round"] - 1)

@@ -73,7 +73,7 @@ from repro import relay as relay_lib, sim
 from repro.core import baselines, client as client_lib, comm
 from repro.optim import adam_init
 from repro.relay import events
-from repro.types import CollabConfig, TrainConfig
+from repro.types import CollabConfig, TrainConfig, resolve_fleet
 
 
 def round_keys(key, n: int):
@@ -101,8 +101,15 @@ class CollabTrainer:
                  client_data: Sequence[Tuple[jax.Array, jax.Array]],
                  test_data: Tuple[jax.Array, jax.Array],
                  ccfg: CollabConfig, tcfg: TrainConfig, seed: int = 0,
-                 policy=None, schedule=None, clock=None,
+                 fleet=None, policy=None, schedule=None, clock=None,
                  download_clock=None):
+        fleet = resolve_fleet(fleet, policy=policy, schedule=schedule,
+                              clock=clock, download_clock=download_clock)
+        if fleet.mesh is not None:
+            raise ValueError(
+                "the sequential oracle steps clients host-side and holds "
+                "no stacked client axis to shard; FleetConfig.mesh only "
+                "applies to the vectorized engine (core/vec_collab.py)")
         assert len(specs) == len(params_list) == len(client_data)
         self.ccfg, self.tcfg = ccfg, tcfg
         self.clients = [
@@ -116,11 +123,11 @@ class CollabTrainer:
         self._upload_order = [
             i for _, ids in client_lib.bucketize(specs, params_list)
             for i in ids]
-        self.clock = sim.get_clock(clock, seed=seed)
+        self.clock = sim.get_clock(fleet.clock, seed=seed)
         self._queue = events.HostEventQueue()
-        self.policy = relay_lib.get_policy(policy)
-        self.schedule = relay_lib.get_schedule(schedule, seed=seed,
-                                               clock=self.clock)
+        self.policy = relay_lib.get_policy(fleet.policy)
+        self.schedule = relay_lib.get_schedule(fleet.participation,
+                                               seed=seed, clock=self.clock)
         self.server = relay_lib.RelayServer(ccfg, ccfg.d_feature, seed,
                                             n_clients=len(specs),
                                             policy=self.policy)
@@ -129,7 +136,7 @@ class CollabTrainer:
         # relay states; a round-t client with download delay d reads
         # _snaps[d] = the state as of round t − d. Only relay modes
         # download, so only they carry the ring.
-        self.dl_clock = sim.get_download_clock(download_clock, seed=seed)
+        self.dl_clock = sim.get_download_clock(fleet.download_clock, seed=seed)
         self._lagged = (self.dl_clock is not None
                         and ccfg.mode in ("cors", "fd"))
         self._h_max = (self.dl_clock.d_max + 1) if self._lagged else 1

@@ -14,11 +14,15 @@ The relay grew from a single flat ring into a pluggable subsystem
   - `relay.server`    — the stateful `RelayServer` wrapper, now
                         policy-parameterized.
 
-This module remains as a re-export shim so existing imports
-(`from repro.core import server as server_lib`) keep working; new code
-should import from `repro.relay` directly.
+This module remains as a DEPRECATED re-export shim for one release so
+existing imports (`from repro.core import server as server_lib`) keep
+working; importing it warns. New code imports from `repro.relay`
+directly — no internal caller triggers the warning (tier-1 runs with
+DeprecationWarnings-as-errors for `repro.*`, see pyproject.toml).
 """
 from __future__ import annotations
+
+import warnings
 
 from repro.relay.base import (EMPTY_OWNER, SEED_OWNER,  # noqa: F401
                               default_capacity)
@@ -26,3 +30,8 @@ from repro.relay.flat import (FlatRelay, RelayState,  # noqa: F401
                               buffer_append, init_relay_state, merge_round,
                               sample_teacher)
 from repro.relay.server import RelayServer  # noqa: F401
+
+warnings.warn(
+    "repro: repro.core.server is a deprecated re-export shim; import from "
+    "repro.relay (flat / base / server) instead. The shim will be removed "
+    "next release.", DeprecationWarning, stacklevel=2)

@@ -29,11 +29,21 @@ their rows without consuming slots. Either way there is exactly one jitted
 round step per (policy, schedule) — the mask and gather indices are traced
 arguments of fixed shape, so participation never retraces.
 
-Device scaling: pass `mesh` (a 1-D mesh with a "clients" axis, see
-`sharding.client_mesh`) and the round step is wrapped in `shard_map` — each
-device vmaps its local client shard and the only cross-device collectives
-are the prototype merge (`prototypes.psum_merge`, the paper's O(C·d')
-exchange) and the observation all-gather into the replicated ring buffer.
+Device scaling is PLACEMENT-DRIVEN (repro.relay.placement): pass a mesh
+with a "clients" axis (`sharding.client_mesh`, via `FleetConfig.mesh`) and
+the SAME traced round body is jitted with in/out shardings resolved from
+the state classes' placement declarations — client-resident leaves
+(params, opt, data, pending uploads) are CLIENT_SHARDED over the mesh
+axis, relay/history state is REPLICATED per `policy.out_spec` /
+`events.out_spec` / `history.out_spec` — and GSPMD inserts the
+collectives. The one cross-device exchange per round is
+`placement.exchange` on the upload payload (the CLIENT_SHARDED ->
+REPLICATED constraint right before the relay append/merge, which lowers
+to the observation all-gather + the paper's O(C·d') prototype
+all-reduce). There are no mesh branches in the round body, so every fleet
+composition — async event log, download-lag history, hetero buckets,
+static-k compaction — runs on the mesh through the same code path that
+runs off it, and off-mesh bit-compatibility is structural.
 
 Heterogeneous-architecture fleets (different client models, a CoRS selling
 point) run BUCKETED: clients are grouped into stackable buckets by
@@ -54,8 +64,10 @@ is the only cross-bucket synchronization point. The round is synchronous:
 The per-round key schedule is the oracle's `collab.round_keys`, indexed by
 ORIGINAL client id and sliced per bucket, so the sequential oracle remains
 the bit-exact reference for ring bookkeeping under any bucket mix
-(tests/test_hetero_bucketed.py). The mesh path and static-k compaction
-remain homogeneous-only: bucket participant counts vary per round even
+(tests/test_hetero_bucketed.py). On a mesh, each bucket's stack is
+CLIENT_SHARDED over the same client axis (GSPMD pads non-divisible bucket
+sizes) and the shared commit is the exchange point. Static-k compaction
+stays homogeneous-only: bucket participant counts vary per round even
 under fixed-k schedules, and per-bucket stacks have different shapes.
 
 Asynchrony: pass `clock` (a repro.sim ClockModel spec) and uploads commit
@@ -66,10 +78,11 @@ clock — in round r+d, all inside ONE jitted async round step (homogeneous)
 or the shared jitted async commit (bucketed). Teachers are always sampled
 from the round-start COMMITTED state (the client's last sync; in-flight
 uploads are invisible). The commit set decouples from the participant set,
-so the async path runs full-width and off-mesh; `D_max = 0` keeps today's
-synchronous fast paths bit-identically. The sequential oracle replays the
-identical event order host-side and stays the bit-exact reference
-(tests/test_async_relay.py).
+so the async path runs full-width (on a mesh the pending buffer is
+CLIENT_SHARDED and the commit payload is the round's one exchange);
+`D_max = 0` keeps today's synchronous fast paths bit-identically. The
+sequential oracle replays the identical event order host-side and stays
+the bit-exact reference (tests/test_async_relay.py).
 
 Download lag: pass `download_clock` (the same `repro.sim` spec machinery,
 independent seed fold) and every client reads its teachers AND global
@@ -88,8 +101,9 @@ own upload is still in flight, and because slot age is clock-derived
 (`clock − stamp`), the ages it sees are the snapshot's own — a stale
 download is automatically older by the time it is read. `H_max = 1` (or
 no download clock) is bit-identical to today's engines; the sequential
-oracle replays the ring host-side (tests/test_download_lag.py). Off-mesh
-only, like async (history-on-the-mesh is a ROADMAP follow-on).
+oracle replays the ring host-side (tests/test_download_lag.py). On a
+mesh the ring is REPLICATED (history.out_spec) and the per-client stale
+reads stay local gathers — no extra collective.
 """
 from __future__ import annotations
 
@@ -100,12 +114,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import relay as relay_lib, sharding, sim
+from repro import relay as relay_lib, sim
 from repro.core import baselines, client as client_lib, collab, comm, \
     prototypes
 from repro.optim import adam_init
+from repro.relay import placement
 from repro.relay.participation import bcast_mask as _bcast, freeze_absent
-from repro.types import CollabConfig, TrainConfig
+from repro.types import CollabConfig, TrainConfig, resolve_fleet
 
 
 def _stack(trees: Sequence[Any]):
@@ -214,7 +229,8 @@ def make_upload_phase(spec: client_lib.ClientSpec, ccfg: CollabConfig):
     return uploads_of
 
 
-def make_relay_commit(policy: relay_lib.RelayPolicy, lagged: bool = False):
+def make_relay_commit(policy: relay_lib.RelayPolicy, lagged: bool = False,
+                      mesh=None):
     """Phase 3b: the round's single relay write. `commit(rstate, payloads)`
     takes the per-bucket upload payloads (in bucket order), concatenates
     their observation rows, sums their prototype contributions, appends and
@@ -227,15 +243,23 @@ def make_relay_commit(policy: relay_lib.RelayPolicy, lagged: bool = False):
     `lagged=True`: `commit(rstate, payloads, hist)` additionally pushes the
     post-merge state into the download-lag history ring and returns
     `(rstate, hist)` (the zero-participant round, which skips this commit
-    entirely, pushes via a bare `history.push` in the engine instead)."""
+    entirely, pushes via a bare `history.push` in the engine instead).
+
+    `mesh`: the concatenated payload is THE round's cross-device exchange
+    (placement.exchange) — the buckets' client-sharded rows and summed
+    prototypes become replicated right before the append/merge."""
 
     def commit(rstate, payloads, *lag):
         cat = lambda k: jnp.concatenate([p[k] for p in payloads])
         proto = prototypes.merge(*[p["proto"] for p in payloads])
         logit = (prototypes.merge(*[p["logit"] for p in payloads])
                  if payloads[0]["logit"] is not None else None)
-        new = policy.append(rstate, cat("obs_rows"), cat("valid_rows"),
-                            cat("owner_rows"), cat("row_mask"))
+        (proto, logit, obs_rows, valid_rows, owner_rows, row_mask) = \
+            placement.exchange(
+                (proto, logit, cat("obs_rows"), cat("valid_rows"),
+                 cat("owner_rows"), cat("row_mask")), mesh)
+        new = policy.append(rstate, obs_rows, valid_rows,
+                            owner_rows, row_mask)
         new = policy.merge_round(new, proto, logit)
         if lagged:
             return new, relay_lib.history.push(lag[0], new)
@@ -244,9 +268,15 @@ def make_relay_commit(policy: relay_lib.RelayPolicy, lagged: bool = False):
     return commit
 
 
+def _client_rep(mesh):
+    """The two resolved shardings of the placement alphabet on `mesh`."""
+    return (placement.resolve(placement.CLIENT_SHARDED, mesh),
+            placement.resolve(placement.REPLICATED, mesh))
+
+
 def make_async_round_step(spec: client_lib.ClientSpec, ccfg: CollabConfig,
                           tcfg: TrainConfig, policy: relay_lib.RelayPolicy,
-                          lagged: bool = False):
+                          lagged: bool = False, mesh=None, templates=None):
     """The homogeneous ASYNC round step (bounded-delay uploads,
     relay/events.py): phases 1-2 exactly as the synchronous step, then ONE
     `events.commit_and_park` — commit every due event (pending uploads
@@ -264,7 +294,13 @@ def make_async_round_step(spec: client_lib.ClientSpec, ccfg: CollabConfig,
     two trailing args `(hist, dl)`, samples teachers from each client's
     `t − dl[i]` snapshot, pushes the post-merge state into the ring, and
     additionally returns the new history — so a stale download of a
-    delayed commit is exactly as old as the two clocks say."""
+    delayed commit is exactly as old as the two clocks say.
+
+    `mesh` + `templates` (dict with "rstate"/"pending"[/"hist"] state
+    examples): jit the SAME traced body with in/out shardings resolved
+    from the placement declarations — client state and the pending buffer
+    CLIENT_SHARDED, relay/history REPLICATED — and mark the commit payload
+    as the round's one exchange (`commit_and_park(..., mesh=mesh)`)."""
     mode = ccfg.mode
     assert mode in ("cors", "fd"), mode
     local_update = client_lib.make_local_update_fn(spec, ccfg, tcfg)
@@ -285,20 +321,35 @@ def make_async_round_step(spec: client_lib.ClientSpec, ccfg: CollabConfig,
         o_s = freeze_absent(mask, new_o, opt)
         metrics = jax.tree.map(
             lambda m: jnp.where(_bcast(mask, m), m, 0.0), metrics)
-        # phase 3 — the event log's single relay write
+        # phase 3 — the event log's single relay write (and, on a mesh,
+        # the round's single cross-device exchange)
         fresh = per_client(p_s, data_x, data_y, upl_ks, ids)
         rstate, pending = relay_lib.events.commit_and_park(
-            policy, rstate, pending, fresh, round_idx, delays, mask)
+            policy, rstate, pending, fresh, round_idx, delays, mask,
+            mesh=mesh)
         if lagged:
             hist = relay_lib.history.push(lag[0], rstate)
             return p_s, o_s, rstate, pending, hist, metrics
         return p_s, o_s, rstate, pending, metrics
 
-    return jax.jit(step)
+    if mesh is None:
+        return jax.jit(step)
+    cl, rep = _client_rep(mesh)
+    rspec = placement.resolve(policy.out_spec(templates["rstate"]), mesh)
+    pspec = placement.resolve(
+        relay_lib.events.out_spec(templates["pending"]), mesh)
+    in_sh = (cl, cl, rspec, pspec, cl, cl, cl, cl, cl, cl, cl, cl, cl, rep)
+    out_sh = (cl, cl, rspec, pspec)
+    if lagged:
+        hspec = placement.resolve(
+            relay_lib.history.out_spec(templates["hist"]), mesh)
+        in_sh += (hspec, cl)
+        out_sh += (hspec,)
+    return jax.jit(step, in_shardings=in_sh, out_shardings=out_sh + (cl,))
 
 
 def make_async_relay_commit(policy: relay_lib.RelayPolicy,
-                            lagged: bool = False):
+                            lagged: bool = False, mesh=None):
     """Heterogeneous counterpart of `make_relay_commit` for the async
     engine: concatenate the buckets' PER-CLIENT payloads in bucket (=
     upload/event) order and run ONE `events.commit_and_park`. `delays` and
@@ -306,13 +357,15 @@ def make_async_relay_commit(policy: relay_lib.RelayPolicy,
     the pending buffer's upload-position indexing. `lagged=True` takes a
     trailing history arg, pushes the post-merge state (this commit runs
     EVERY round, so the ring advances even on no-commit rounds) and
-    returns it."""
+    returns it. `mesh` marks the commit payload as the round's one
+    cross-device exchange (see `events.commit_and_park`)."""
 
     def commit(rstate, pending, payloads, round_idx, delays, mask, *lag):
         keys = [k for k in payloads[0] if payloads[0][k] is not None]
         fresh = {k: jnp.concatenate([p[k] for p in payloads]) for k in keys}
         rstate, pending = relay_lib.events.commit_and_park(
-            policy, rstate, pending, fresh, round_idx, delays, mask)
+            policy, rstate, pending, fresh, round_idx, delays, mask,
+            mesh=mesh)
         if lagged:
             return rstate, pending, relay_lib.history.push(lag[0], rstate)
         return rstate, pending
@@ -413,10 +466,16 @@ class VectorizedCollabTrainer:
     and `history`; `specs` may be a single ClientSpec or a sequence. Clients
     are grouped into stackable buckets (`client_lib.bucketize`); a
     homogeneous fleet is ONE bucket and runs the fused single-step fast
-    path (static-k compaction, optional shard_map mesh), a mixed fleet runs
-    one vmapped step per bucket around a shared relay. Client datasets are
-    trimmed to the shortest partition within each bucket so they stack;
-    pass equal-size partitions for exact parity with the oracle.
+    path (static-k compaction, optional placement-sharded mesh), a mixed
+    fleet runs one vmapped step per bucket around a shared relay. Client
+    datasets are trimmed to the shortest partition within each bucket so
+    they stack; pass equal-size partitions for exact parity with the
+    oracle.
+
+    The fleet (relay policy, participation schedule, upload/download
+    clocks, mesh) is ONE `FleetConfig` passed as `fleet=`; the loose
+    legacy kwargs still work for a release via the `resolve_fleet`
+    deprecation shim.
     """
 
     def __init__(self,
@@ -426,67 +485,69 @@ class VectorizedCollabTrainer:
                  client_data: Sequence[Tuple[jax.Array, jax.Array]],
                  test_data: Tuple[jax.Array, jax.Array],
                  ccfg: CollabConfig, tcfg: TrainConfig, seed: int = 0,
-                 mesh=None, policy=None, schedule=None, clock=None,
-                 download_clock=None):
+                 fleet=None, mesh=None, policy=None, schedule=None,
+                 clock=None, download_clock=None):
+        fleet = resolve_fleet(fleet, mesh=mesh, policy=policy,
+                              schedule=schedule, clock=clock,
+                              download_clock=download_clock)
         if isinstance(specs, client_lib.ClientSpec):
             specs = [specs] * len(params_list)
         assert len(specs) == len(params_list) == len(client_data)
         self.ccfg, self.tcfg = ccfg, tcfg
         self.n_clients = N = len(params_list)
-        self.mesh = mesh
-        self.policy = relay_lib.get_policy(policy)
-        self.clock = sim.get_clock(clock, seed=seed)
-        self.schedule = relay_lib.get_schedule(schedule, seed=seed,
-                                               clock=self.clock)
+        self.mesh = mesh = fleet.mesh
+        self.policy = relay_lib.get_policy(fleet.policy)
+        self.clock = sim.get_clock(fleet.clock, seed=seed)
+        self.schedule = relay_lib.get_schedule(fleet.participation,
+                                               seed=seed, clock=self.clock)
         # Asynchrony (bounded-delay uploads, relay/events.py) only touches
         # relay commits, so only relay modes run the async path; a D_max=0
         # clock IS the synchronous fleet and keeps today's fast paths
-        # (static-k compaction, mesh).
+        # (static-k compaction) — and composes with a mesh either way: the
+        # pending buffer is CLIENT_SHARDED (events.out_spec) and the
+        # commit payload is the round's one exchange.
         self._async = (self.clock is not None and self.clock.d_max > 0
                        and ccfg.mode in ("cors", "fd"))
-        if self._async and mesh is not None:
-            raise ValueError(
-                "the shard_map mesh path is synchronous: committing a "
-                "cross-device pending buffer in event order needs an "
-                f"all-gather redesign (ROADMAP). Got d_max="
-                f"{self.clock.d_max}; run async fleets off-mesh "
-                "(mesh=None) or use a D_max=0 clock.")
         # Download lag (relay/history.py): only relay modes download, so
         # only they carry the snapshot ring. Binding ANY download clock
         # (even d_max=0, i.e. H_max=1) routes through the history
-        # machinery — the bit-compat probe the tests use.
-        self.dl_clock = sim.get_download_clock(download_clock, seed=seed)
+        # machinery — the bit-compat probe the tests use. The ring is
+        # REPLICATED on a mesh (history.out_spec); stale reads stay local.
+        self.dl_clock = sim.get_download_clock(fleet.download_clock,
+                                               seed=seed)
         self._lagged = (self.dl_clock is not None
                         and ccfg.mode in ("cors", "fd"))
-        if self._lagged and mesh is not None:
-            raise ValueError(
-                "download-lag history is off-mesh: the snapshot ring is "
-                "replicated state and per-client stale reads under "
-                "shard_map need a history-on-the-mesh design (ROADMAP). "
-                f"Got download d_max={self.dl_clock.d_max}; run lagged "
-                "fleets off-mesh (mesh=None) or drop the download clock.")
         buckets = client_lib.bucketize(specs, params_list)
         self.bucket_ids: List[List[int]] = [ids for _, ids in buckets]
         self.hetero = len(buckets) > 1
-        if self.hetero:
-            if ccfg.mode == "fedavg":
-                raise ValueError(
-                    "FedAvg averages whole weight vectors, which needs one "
-                    f"shared architecture; got {len(buckets)} distinct "
-                    "(spec, param-shape) buckets. Heterogeneous fleets only "
-                    "make sense in representation-coupled modes "
-                    "('cors'/'fd') or independently ('il').")
-            if mesh is not None:
-                raise ValueError(
-                    "the shard_map mesh path needs one stacked client axis "
-                    f"of uniform shape; got {len(buckets)} buckets. Run "
-                    "heterogeneous fleets off-mesh (mesh=None), or shard "
-                    "each bucket separately (ROADMAP).")
-        if mesh is not None:
-            assert N % mesh.shape["clients"] == 0, (N, dict(mesh.shape))
+        if self.hetero and ccfg.mode == "fedavg":
+            raise ValueError(
+                "FedAvg averages whole weight vectors, which needs one "
+                f"shared architecture; got {len(buckets)} distinct "
+                "(spec, param-shape) buckets. Heterogeneous fleets only "
+                "make sense in representation-coupled modes "
+                "('cors'/'fd') or independently ('il').")
 
+        if mesh is not None and N % mesh.shape[placement.CLIENT_AXIS]:
+            raise ValueError(
+                f"FleetConfig.mesh: the fleet's client axis (N={N}) must "
+                f"divide the mesh's '{placement.CLIENT_AXIS}' axis "
+                f"({mesh.shape[placement.CLIENT_AXIS]} devices). "
+                "CLIENT_SHARDED state at rest (the client stacks, the "
+                "async pending buffer) must materialize its sharding, and "
+                "jax arrays cannot hold an uneven NamedSharding — GSPMD "
+                "only pads values internal to a jit (which is why an "
+                "uneven static-k block or hetero BUCKET is fine). Pad the "
+                "fleet or use a device count that divides it.")
         self.relay_state = self.policy.init_state(
             ccfg, ccfg.d_feature, seed, n_clients=N)
+        if mesh is not None:
+            # commit the initial state to its declared placement so the
+            # first round starts where every later round ends
+            self.relay_state = jax.device_put(
+                self.relay_state,
+                placement.resolve(self.policy.out_spec(self.relay_state),
+                                  mesh))
         self.test_x, self.test_y = (jnp.asarray(test_data[0]),
                                     jnp.asarray(test_data[1]))
         self.ledger = comm.CommLedger()
@@ -500,10 +561,20 @@ class VectorizedCollabTrainer:
             self.pending = relay_lib.events.init_pending(
                 N, self.clock.d_max, ccfg.m_up, ccfg.num_classes,
                 ccfg.d_feature, fd=(ccfg.mode == "fd"))
+            if mesh is not None:
+                self.pending = jax.device_put(
+                    self.pending,
+                    placement.resolve(
+                        relay_lib.events.out_spec(self.pending), mesh))
             self._commit_mirror = relay_lib.events.CommitMirror()
         if self._lagged:
             self._h_max = self.dl_clock.d_max + 1
             self.hist = relay_lib.history.init(self.relay_state, self._h_max)
+            if mesh is not None:
+                self.hist = jax.device_put(
+                    self.hist,
+                    placement.resolve(
+                        relay_lib.history.out_spec(self.hist), mesh))
             # bare push for rounds whose relay commit is skipped entirely
             # (zero-participant synchronous bucketed rounds): the ring
             # still advances with the (unchanged) post-round state.
@@ -517,20 +588,34 @@ class VectorizedCollabTrainer:
         self.spec = specs[0]
         self.data_x, self.data_y, self.batches, self.params, self.opt_state \
             = self._stack_clients(params_list, client_data)
+        if mesh is not None:
+            # commit the client stacks to their placement up front: round 0
+            # then presents the same (sharding, committed) signature as
+            # every later round, keeping the jit fastpath single-entry
+            # (the compile-once contract the tests pin)
+            cl = placement.resolve(placement.CLIENT_SHARDED, mesh)
+            (self.data_x, self.data_y, self.batches, self.params,
+             self.opt_state) = jax.device_put(
+                (self.data_x, self.data_y, self.batches, self.params,
+                 self.opt_state), cl)
 
-        # Compaction: only off-mesh (gathering an arbitrary client subset
-        # across a sharded axis would defeat shard_map's static layout),
-        # only when the schedule's per-round count is static, and only
-        # synchronously (lateness decouples who trains from whose upload
-        # commits, so the participant gather does not cover the commit
-        # set — the async step runs full-width).
+        # Compaction: only when the schedule's per-round count is static,
+        # and only synchronously (lateness decouples who trains from whose
+        # upload commits, so the participant gather does not cover the
+        # commit set — the async step runs full-width). On a mesh the
+        # compacted (k, ...) block is client-sharded like the full stack;
+        # GSPMD pads non-divisible k.
         fixed_k = self.schedule.fixed_k
-        self._k_active = (fixed_k if (mesh is None and fixed_k is not None
+        self._k_active = (fixed_k if (fixed_k is not None
                                       and not self._async)
                           else N)
         self._round_step = (
-            make_async_round_step(self.spec, ccfg, tcfg, self.policy,
-                                  lagged=self._lagged)
+            make_async_round_step(
+                self.spec, ccfg, tcfg, self.policy, lagged=self._lagged,
+                mesh=mesh,
+                templates={"rstate": self.relay_state,
+                           "pending": self.pending,
+                           "hist": self.hist if self._lagged else None})
             if self._async else self._make_round_step())
         self._eval_hits = make_eval_hits(self.spec)
 
@@ -565,6 +650,19 @@ class VectorizedCollabTrainer:
             data_x, data_y, batches, params, opt = self._stack_clients(
                 [params_list[i] for i in ids],
                 [client_data[i] for i in ids])
+            if self.mesh is not None:
+                # each bucket's stack is client-sharded over the SAME mesh
+                # axis; a bucket whose size does not divide the axis falls
+                # back to replicated (an array at rest cannot hold the
+                # uneven sharding GSPMD would pad inside a jit).
+                # Committing the inputs here lets the per-bucket jit infer
+                # its shardings — the shared commit is the exchange point
+                even = len(ids) % self.mesh.shape[placement.CLIENT_AXIS] == 0
+                sh = placement.resolve(
+                    placement.CLIENT_SHARDED if even else placement.REPLICATED,
+                    self.mesh)
+                data_x, data_y, batches, params, opt = jax.device_put(
+                    (data_x, data_y, batches, params, opt), sh)
             self.buckets.append(ClientBucket(
                 spec=spec, ids=np.asarray(ids, np.int64), params=params,
                 opt=opt, batches=batches, data_x=data_x, data_y=data_y,
@@ -576,9 +674,11 @@ class VectorizedCollabTrainer:
             for j, i in enumerate(ids):
                 self._client_slot[i] = (b, j)
         self._relay_commit = jax.jit(
-            make_async_relay_commit(self.policy, lagged=self._lagged)
+            make_async_relay_commit(self.policy, lagged=self._lagged,
+                                    mesh=self.mesh)
             if self._async
-            else make_relay_commit(self.policy, lagged=self._lagged))
+            else make_relay_commit(self.policy, lagged=self._lagged,
+                                   mesh=self.mesh))
 
     # ------------------------------------------------------------------
     def client_params(self, i: int):
@@ -593,7 +693,7 @@ class VectorizedCollabTrainer:
         spec, ccfg, tcfg = self.spec, self.ccfg, self.tcfg
         N, mesh, policy = self.n_clients, self.mesh, self.policy
         mode = ccfg.mode
-        lagged = self._lagged                     # off-mesh only (guarded)
+        lagged = self._lagged
         local_update = client_lib.make_local_update_fn(spec, ccfg, tcfg)
         teachers = make_teacher_phase(policy, ccfg, lagged=lagged)
         uploads_of = make_upload_phase(spec, ccfg)
@@ -601,19 +701,19 @@ class VectorizedCollabTrainer:
         # subset: with k == N the idx is a runtime arange XLA cannot elide,
         # and the full-size gather + scatter-back of params/opt/batches
         # would tax every full-participation round for nothing.
-        compact = mesh is None and self._k_active < N
+        compact = self._k_active < N
 
         def round_core(params, opt, rstate, batches, data_x, data_y, ids,
                        relay_ks, upd_ks, upl_ks, mask, idx, *lag):
-            # `lag` = (hist, dl) under a download clock (off-mesh): the
-            # snapshot ring and this round's (N,) download delays, both
-            # traced — the mesh path never sees them, so its in_specs are
-            # untouched.
+            # `lag` = (hist, dl) under a download clock: the snapshot ring
+            # (REPLICATED) and this round's (N,) download delays, both
+            # traced. The body is mesh-free — with a mesh, the SAME trace
+            # is jitted under the placement-resolved shardings below and
+            # GSPMD inserts the collectives at the exchange.
             hist, dl = lag if lagged else (None, None)
-            # phase 0 — participant gather. Off-mesh the round runs on the
+            # phase 0 — participant gather: the round runs on the
             # idx-selected (k, ...) block (identity permutation under full
-            # participation); on-mesh each device keeps its full local
-            # shard and `sub_mask` does the masking.
+            # participation).
             if compact:
                 take = lambda t: jax.tree.map(lambda a: a[idx], t)
                 p_s, o_s, b_s = take(params), take(opt), take(batches)
@@ -629,8 +729,6 @@ class VectorizedCollabTrainer:
                 dl_s = dl
             wf = sub_mask.astype(jnp.float32)
             n_present = jnp.sum(wf)
-            if mesh is not None:
-                n_present = jax.lax.psum(n_present, "clients")
             any_present = n_present > 0
 
             keep = lambda new, old: freeze_absent(sub_mask, new, old)
@@ -654,15 +752,14 @@ class VectorizedCollabTrainer:
             if mode in ("cors", "fd"):
                 proto, logit, obs_rows, valid_rows, owner_rows, row_mask = \
                     uploads_of(p_s, dx, dy, ok, ids_s, sub_mask)
-                if mesh is not None:
-                    # merge is the paper's only collective: an all-reduce of
-                    # (C, d'+1) floats over the client axis
-                    proto = prototypes.psum_merge(proto, "clients")
-                    if logit is not None:
-                        logit = prototypes.psum_merge(logit, "clients")
-                    obs_rows, valid_rows, owner_rows, row_mask = (
-                        jax.lax.all_gather(a, "clients", axis=0, tiled=True)
-                        for a in (obs_rows, valid_rows, owner_rows, row_mask))
+                # THE cross-device exchange (relay/placement.py): the
+                # upload payload becomes replicated here — GSPMD lowers it
+                # to the observation all-gather + the paper's O(C·d')
+                # prototype all-reduce. No-op off-mesh.
+                (proto, logit, obs_rows, valid_rows, owner_rows,
+                 row_mask) = placement.exchange(
+                    (proto, logit, obs_rows, valid_rows, owner_rows,
+                     row_mask), mesh)
                 new_rstate = policy.append(rstate, obs_rows, valid_rows,
                                            owner_rows, row_mask)
                 new_rstate = policy.merge_round(new_rstate, proto, logit)
@@ -674,9 +771,11 @@ class VectorizedCollabTrainer:
                 denom = jnp.maximum(n_present, 1.0)
 
                 def avg(p):
+                    # the weight average is fedavg's exchange: summing over
+                    # the (sharded) client axis and constraining the result
+                    # replicated lowers to the model-size all-reduce
                     s = jnp.sum(p.astype(jnp.float32) * _bcast(wf, p), axis=0)
-                    if mesh is not None:
-                        s = jax.lax.psum(s, "clients")
+                    s = placement.exchange(s, mesh)
                     a = (s / denom).astype(p.dtype)
                     return jnp.where(_bcast(sub_mask, p),
                                      jnp.broadcast_to(a, p.shape), p)
@@ -703,13 +802,22 @@ class VectorizedCollabTrainer:
         if mesh is None:
             return jax.jit(round_core)
 
-        from jax.sharding import PartitionSpec as P
-        cl, rep = P("clients"), P()
-        mapped = sharding.shard_map(
-            round_core, mesh=mesh,
-            in_specs=(cl, cl, rep, cl, cl, cl, cl, cl, cl, cl, cl, cl),
-            out_specs=(cl, cl, rep, cl), check_rep=False)
-        return jax.jit(mapped)
+        # Placement-resolved shardings: the SAME round_core trace, jitted
+        # with client state CLIENT_SHARDED and relay/history state at the
+        # policy's declared placement. GSPMD partitions the body and the
+        # only collectives are the ones the exchange implies.
+        cl, rep = _client_rep(mesh)
+        rspec = placement.resolve(
+            policy.out_spec(self.relay_state), mesh)
+        in_sh = (cl, cl, rspec, cl, cl, cl, cl, cl, cl, cl, cl, rep)
+        out_sh = (cl, cl, rspec)
+        if lagged:
+            hspec = placement.resolve(
+                relay_lib.history.out_spec(self.hist), mesh)
+            in_sh += (hspec, cl)
+            out_sh += (hspec,)
+        return jax.jit(round_core, in_shardings=in_sh,
+                       out_shardings=out_sh + (cl,))
 
     # ------------------------------------------------------------------
     def _round_commits(self, r: int, mask_np, delays_np):
@@ -764,7 +872,7 @@ class VectorizedCollabTrainer:
                 (self.params, self.opt_state, self.relay_state,
                  self.pending, metrics) = out
         else:
-            if self.mesh is None and self._k_active < N:
+            if self._k_active < N:
                 idx_np = present                 # static-k compaction
                 assert idx_np.size == self._k_active, (
                     "schedule emitted a mask inconsistent with its fixed_k",

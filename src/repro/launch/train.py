@@ -24,7 +24,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import sharding
 from repro.core import losses, prototypes
-from repro.relay import history as relay_history
+from repro.relay import history as relay_history, placement
 from repro.relay.participation import bcast_mask, freeze_absent
 from repro.models import encdec, lm
 from repro.optim import adam_init, adam_update
@@ -421,6 +421,32 @@ def state_shardings(state_shapes, cfg: ModelConfig, mesh, n_clients: int = 1,
                                      NamedSharding(mesh, cnt_spec))
     return TrainState(params_sh, opt_sh, proto_sh,
                       NamedSharding(mesh, P()))
+
+
+def round_sync_shardings(mesh, n_clients: int = 1):
+    """Placement-resolved shardings for the per-round prototype exchange
+    (`make_round_sync` / `make_async_round_sync` /
+    `make_download_lag_round_sync`), via the SAME declarations the
+    collaborative engines use (repro.relay.placement), resolved against
+    this path's "pod" client axis:
+
+      - the shared / pending / history ProtoStates are REPLICATED — the
+        pending buffer here is delay-slot-indexed (not client-indexed,
+        unlike relay/events.py) and the ring snapshots a replicated state,
+        so there is nothing to shard;
+      - per-client bucket stats (leading client axis) are CLIENT_SHARDED
+        over "pod" — their sum inside round_sync is then the round's one
+        CLIENT_SHARDED -> REPLICATED exchange, exactly like
+        `placement.exchange` in core/vec_collab.py.
+
+    Returns (replicated, stats) NamedShardings for jit in/out_shardings;
+    on a single-client or pod-less mesh both are replicated (the identity
+    placement)."""
+    lead = _client_lead(mesh, n_clients)
+    rep = placement.resolve(placement.REPLICATED, mesh)
+    stats = (placement.resolve(placement.CLIENT_SHARDED, mesh, axis=lead)
+             if lead else rep)
+    return rep, stats
 
 
 def batch_shardings(batch_shapes, mesh, n_clients: int = 1, *,

@@ -24,10 +24,12 @@ from repro.relay.participation import (AdaptiveParticipation,  # noqa: F401
                                        FullParticipation,
                                        ParticipationSchedule, UniformK,
                                        get_schedule)
+from repro.relay import placement  # noqa: F401
 from repro.relay.per_class import PerClassRelay, PerClassRelayState  # noqa: F401
 from repro.relay.server import RelayServer  # noqa: F401
 from repro.relay.staleness import (StalenessRelay,  # noqa: F401
                                    StalenessRelayState, staleness_weights)
+from repro.specs import parse_spec
 
 POLICIES = {"flat": FlatRelay, "per_class": PerClassRelay,
             "staleness": StalenessRelay}
@@ -40,10 +42,7 @@ def get_policy(spec: Union[str, RelayPolicy, None], **kwargs) -> RelayPolicy:
         return FlatRelay()
     if isinstance(spec, RelayPolicy):
         return spec
-    name, _, arg = str(spec).partition(":")
-    if name not in POLICIES:
-        raise ValueError(f"unknown relay policy: {spec!r} "
-                         f"(have {sorted(POLICIES)})")
-    if name == "staleness" and arg:
-        kwargs.setdefault("lam", float(arg))
+    name, args = parse_spec(spec, "relay policy", POLICIES)
+    if name == "staleness" and args:
+        kwargs.setdefault("lam", float(args[0]))
     return POLICIES[name](**kwargs)

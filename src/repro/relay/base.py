@@ -69,6 +69,7 @@ from typing import Dict, Optional
 import jax.numpy as jnp
 
 from repro.core import prototypes
+from repro.relay import placement
 from repro.types import CollabConfig
 
 # Ring-slot owner sentinels. Real clients are >= 0.
@@ -123,6 +124,17 @@ class RelayPolicy:
 
     def merge_round(self, state, proto, logit=None):
         raise NotImplementedError
+
+    # -- placement contract (relay/placement.py) ---------------------------
+    def out_spec(self, state):
+        """Placement pytree of `state` (same structure, one
+        REPLICATED/CLIENT_SHARDED tag per leaf), consumed by the vectorized
+        engine to resolve jit in/out shardings on a client mesh. The relay
+        is the paper's SHARED pool — every client samples from it and the
+        server merges into it — so the default (and every built-in
+        policy's) declaration is all-REPLICATED; policies adding
+        per-client-resident state override this per field."""
+        return placement.like(state, placement.REPLICATED)
 
     # -- introspection (tests / notebooks; host-side, not traced) ----------
     def debug_entries(self, state):

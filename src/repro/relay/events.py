@@ -42,6 +42,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.relay import placement
+
 
 class PendingState(NamedTuple):
     """In-flight uploads of a fleet, fixed shape, indexed by
@@ -90,6 +92,15 @@ def init_pending(n: int, d_max: int, m_up: int, num_classes: int,
         live=jnp.zeros((n, d_max), bool))
 
 
+def out_spec(pending: PendingState):
+    """Placement declaration (relay/placement.py): every pending leaf is
+    indexed [upload position, pending slot, ...] and an in-flight upload is
+    never read by another client until it commits, so the whole buffer is
+    CLIENT_SHARDED over its leading (upload position) axis. The commit
+    itself is the one exchange point — see `commit_and_park`'s `mesh`."""
+    return placement.like(pending, placement.CLIENT_SHARDED)
+
+
 def event_slot_order(round_idx, d_max: int):
     """Pending-slot permutation putting slots in EVENT (birth-ascending)
     order for a round-`round_idx` commit: slot of birth round_idx - d_max,
@@ -105,7 +116,7 @@ def _ordered(pending: PendingState, order):
 
 
 def commit_and_park(policy, rstate, pending: PendingState, fresh: Dict,
-                    round_idx, delays, mask):
+                    round_idx, delays, mask, mesh=None):
     """ONE round of the asynchronous relay, pure and jit-compatible:
     commit every due event in event order, then park this round's delayed
     uploads. The single relay write of the async engines.
@@ -114,7 +125,11 @@ def commit_and_park(policy, rstate, pending: PendingState, fresh: Dict,
     order — dict(obs (N, m, C, d'), valid (N, C), psum (N, C, d'),
     pcnt (N, C), lsum/lcnt or None, owner (N,) int32 original client ids).
     round_idx () int32 traced; delays (N,) int32 (this round's commit
-    delays, upload order); mask (N,) bool participation.
+    delays, upload order); mask (N,) bool participation. `mesh`, when
+    given, marks the assembled commit payload as THE round's cross-device
+    exchange (placement.exchange): the due rows and prototype sums leave
+    the client-sharded domain right before the replicated append/merge,
+    and GSPMD lowers the transition to one all-gather/all-reduce.
 
     Returns (new_rstate, new_pending). A round with zero commits leaves
     rstate untouched (no append, no merge, no clock tick) — the async
@@ -174,6 +189,14 @@ def commit_and_park(policy, rstate, pending: PendingState, fresh: Dict,
             lsum = lsum + jnp.einsum("dn,dn...->...", wdue, po.lsum)
             lcnt = lcnt + jnp.einsum("dn,dn...->...", wdue, po.lcnt)
         logit = prototypes.ProtoState(lsum, lcnt)
+
+    # THE cross-device exchange: the commit payload (due rows + merged
+    # sums) becomes replicated here; everything above is element-wise along
+    # the client axis, everything below touches only replicated state.
+    (obs_rows, valid_rows, owner_rows, row_mask, stamp_rows, proto, logit,
+     any_commit) = placement.exchange(
+        (obs_rows, valid_rows, owner_rows, row_mask, stamp_rows, proto,
+         logit, any_commit), mesh)
 
     new_rstate = policy.append(rstate, obs_rows, valid_rows, owner_rows,
                                row_mask, stamp_rows)

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import prototypes
-from repro.relay import base
+from repro.relay import base, placement
 from repro.relay.base import EMPTY_OWNER, SEED_OWNER, default_capacity
 from repro.types import CollabConfig
 
@@ -163,6 +163,13 @@ class FlatRelay(base.RelayPolicy):
 
     def merge_round(self, state, proto, logit=None):
         return merge_round(state, proto, logit)
+
+    def out_spec(self, state):
+        """Placement declaration (relay/placement.py): the flat ring IS the
+        shared pool — any client may sample any slot and one append
+        interleaves all clients' rows through one write pointer — so every
+        leaf (ring, prototypes, ptr, clock) is REPLICATED."""
+        return placement.like(state, placement.REPLICATED)
 
     def debug_entries(self, state):
         owner = np.asarray(state.owner)

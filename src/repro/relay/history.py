@@ -52,6 +52,8 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.relay import placement
+
 
 class History(NamedTuple):
     """snaps: the stacked snapshot pytree — every leaf (H_max, ...);
@@ -71,6 +73,15 @@ def init(snapshot, h_max: int) -> History:
     snaps = jax.tree.map(
         lambda a: jnp.repeat(jnp.asarray(a)[None], h_max, axis=0), snapshot)
     return History(snaps=snaps, head=jnp.zeros((), jnp.int32))
+
+
+def out_spec(hist: History):
+    """Placement declaration (relay/placement.py): the ring stacks
+    snapshots of a REPLICATED relay state along a history axis, and every
+    client must be able to read any snapshot depth — the whole ring
+    (snaps + head) is REPLICATED. `read_at` under a client-sharded delay
+    vector is then a local gather per device, no collective."""
+    return placement.like(hist, placement.REPLICATED)
 
 
 def push(hist: History, snapshot) -> History:

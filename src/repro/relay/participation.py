@@ -34,6 +34,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.specs import parse_spec
+
 
 def bcast_mask(vec, like):
     """Broadcast a (k,) mask/weight vector against a (k, ...) leaf."""
@@ -215,19 +217,20 @@ def get_schedule(spec, seed: int = 0, clock=None) -> ParticipationSchedule:
                 and spec.clock is None:
             spec.bind_clock(clock)
         return spec
-    name, _, arg = str(spec).partition(":")
+    name, args = parse_spec(
+        spec, "participation schedule",
+        ("full", "uniform_k", "cyclic", "bernoulli", "adaptive"),
+        aliases={"bernoulli_p": "bernoulli"})
     if name == "full":
         return FullParticipation()
     if name == "uniform_k":
-        return UniformK(k=int(arg), seed=seed)
+        return UniformK(k=int(args[0]), seed=seed)
     if name == "cyclic":
-        return Cyclic(k=int(arg))
-    if name in ("bernoulli", "bernoulli_p"):
-        return BernoulliP(p=float(arg), seed=seed)
-    if name == "adaptive":
-        args = [a for a in arg.split(",") if a] if arg else []
-        sched = AdaptiveParticipation(
-            p=float(args[0]) if args else 0.5,
-            boost=float(args[1]) if len(args) > 1 else 1.0, seed=seed)
-        return sched.bind_clock(clock) if clock is not None else sched
-    raise ValueError(f"unknown participation schedule: {spec!r}")
+        return Cyclic(k=int(args[0]))
+    if name == "bernoulli":
+        return BernoulliP(p=float(args[0]), seed=seed)
+    # adaptive
+    sched = AdaptiveParticipation(
+        p=float(args[0]) if args else 0.5,
+        boost=float(args[1]) if len(args) > 1 else 1.0, seed=seed)
+    return sched.bind_clock(clock) if clock is not None else sched

@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.relay import base
+from repro.relay import base, placement
 from repro.relay.base import EMPTY_OWNER, SEED_OWNER
 from repro.types import CollabConfig
 
@@ -163,6 +163,12 @@ class PerClassRelay(base.RelayPolicy):
         return state._replace(age=jnp.where(state.valid,
                                             state.clock - state.stamp,
                                             state.age))
+
+    def out_spec(self, state):
+        """Placement declaration (relay/placement.py): the leading axis of
+        every ring leaf is the CLASS axis (C independent rings shared by
+        all clients), not a client axis — the whole state is REPLICATED."""
+        return placement.like(state, placement.REPLICATED)
 
     def debug_entries(self, state):
         valid = np.asarray(state.valid)

@@ -1,0 +1,99 @@
+"""Placement — where each piece of fleet state lives on a client mesh.
+
+The relay subsystem holds three kinds of round state, and they want
+different homes on a multi-device mesh:
+
+  - relay states (flat / per_class / staleness rings, global prototypes):
+    the SHARED pool every client reads and the server merges — REPLICATED;
+  - the async pending buffer (relay/events.py): one in-flight slot row per
+    upload position, never read across clients until commit —
+    CLIENT_SHARDED over the leading client axis;
+  - the download-lag history ring (relay/history.py): snapshots of a
+    replicated state — REPLICATED.
+
+Before this module, every "… on the mesh" feature needed its own engine
+branch (an explicit `psum` here, an `all_gather` there), so each new
+feature landed off-mesh first and raised when a mesh was present. The
+redesign (ROADMAP item 1) inverts that: state classes DECLARE a placement
+via an `out_spec`-style contract (`RelayPolicy.out_spec`,
+`events.out_spec`, `history.out_spec`), the engine resolves declarations
+to `jax.jit` in/out shardings, and GSPMD inserts the collectives. The
+traced round body is identical with and without a mesh — off-mesh
+bit-compatibility is structural, not re-proven per feature.
+
+The one-exchange-per-round invariant: the only point where client-sharded
+values cross devices is `exchange()` — the upload payload (observation
+rows + prototype sums) is constrained to REPLICATED right before the relay
+append/merge. Everything upstream (teacher sampling, local updates, upload
+computation) is element-wise along the client axis; everything downstream
+(append, merge, history push) is replicated. This is the placement-driven
+analogue of Alpa's cross-mesh resharding: like its `broadcast` vs
+`send_recv` choice, the exchange strategy is derived from declared source
+and destination placements (CLIENT_SHARDED -> REPLICATED lowers to an
+all-gather / psum), not hard-coded into the pipeline runtime.
+
+`axis` defaults to the collaborative engines' "clients" mesh axis
+(`sharding.client_mesh`); the LM launch path resolves the same
+declarations against its "pod" axis (launch/train.py).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro import sharding
+
+# Placement of one state leaf. CLIENT_SHARDED means the LEADING axis is the
+# client axis; everything else is REPLICATED.
+REPLICATED = "replicated"
+CLIENT_SHARDED = "client_sharded"
+
+# The vectorized collab engines' mesh axis name (sharding.client_mesh).
+CLIENT_AXIS = "clients"
+
+_VALID = (REPLICATED, CLIENT_SHARDED)
+
+
+def _check(placement: str):
+    if placement not in _VALID:
+        raise ValueError(
+            f"unknown placement: {placement!r} (have {sorted(_VALID)})")
+
+
+def like(tree, placement: str):
+    """Placement pytree: `tree`'s structure with every leaf = `placement`."""
+    _check(placement)
+    return jax.tree.map(lambda _: placement, tree)
+
+
+def device_spec(mesh, placement: str, axis: str = CLIENT_AXIS):
+    """Resolve ONE placement to a NamedSharding on `mesh`."""
+    _check(placement)
+    if placement == CLIENT_SHARDED:
+        return sharding.leading_axis(mesh, axis)
+    return sharding.replicated(mesh)
+
+
+def resolve(placements, mesh, axis: str = CLIENT_AXIS):
+    """Resolve a placement pytree (from an `out_spec` declaration) to a
+    same-structure NamedSharding pytree — what `jax.jit`'s
+    in_shardings/out_shardings consume. `placements` may also be a single
+    placement string (jit broadcasts a sharding prefix over the arg's
+    subtree)."""
+    if isinstance(placements, str):
+        return device_spec(mesh, placements, axis)
+    return jax.tree.map(lambda p: device_spec(mesh, p, axis), placements)
+
+
+def exchange(tree, mesh, axis: str = CLIENT_AXIS):
+    """THE cross-device exchange: constrain every leaf of `tree` to
+    REPLICATED. Called exactly once per round, on the upload payload, right
+    before the relay append/merge; GSPMD lowers the
+    CLIENT_SHARDED -> REPLICATED transition to the all-gather (rows) and
+    all-reduce (prototype sums) that used to be hand-written engine
+    branches. No-op without a mesh, so the traced body stays identical
+    off-mesh."""
+    if mesh is None:
+        return tree
+    rep = sharding.replicated(mesh)
+    return jax.tree.map(
+        lambda x: jax.lax.with_sharding_constraint(x, rep), tree)

@@ -30,7 +30,7 @@ from typing import Dict, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.relay import base, flat
+from repro.relay import base, flat, placement
 from repro.relay.base import EMPTY_OWNER
 from repro.types import CollabConfig
 
@@ -142,6 +142,12 @@ class StalenessRelay(base.RelayPolicy):
         live = state.owner != EMPTY_OWNER
         return state._replace(
             age=jnp.where(live, state.clock - state.stamp, state.age))
+
+    def out_spec(self, state):
+        """Placement declaration (relay/placement.py): same shared flat
+        ring as FlatRelay — the per-slot `age` column is indexed by ring
+        slot, not by client — so every leaf is REPLICATED."""
+        return placement.like(state, placement.REPLICATED)
 
     def debug_entries(self, state):
         import numpy as np

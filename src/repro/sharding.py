@@ -91,6 +91,19 @@ def named(mesh: Mesh, spec: P) -> NamedSharding:
     return NamedSharding(mesh, spec)
 
 
+def replicated(mesh: Mesh) -> NamedSharding:
+    """Every-device-holds-it sharding (GSPMD P())."""
+    return NamedSharding(mesh, P())
+
+
+def leading_axis(mesh: Mesh, axis: str) -> NamedSharding:
+    """Leading-dim-over-`axis` sharding (GSPMD P(axis)); the client axis of
+    the collaborative engines ("clients" on a `client_mesh`, "pod" on the
+    LM launch mesh). GSPMD pads non-divisible leading dims, so uneven
+    client counts (hetero buckets) shard without a divisibility assert."""
+    return NamedSharding(mesh, P(axis))
+
+
 # ---------------------------------------------------------------------------
 # Parameter partition rules
 # ---------------------------------------------------------------------------

@@ -25,6 +25,8 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from repro.specs import parse_spec
+
 
 class ClockModel:
     name: str = "abstract"
@@ -114,9 +116,11 @@ def get_clock(spec, seed: int = 0):
         return None
     if isinstance(spec, ClockModel):
         return spec
-    name, _, arg = str(spec).partition(":")
-    args = [a for a in arg.split(",") if a] if arg else []
-    if name in ("none", "sync"):
+    name, args = parse_spec(
+        spec, "clock model",
+        ("none", "homogeneous", "lognormal", "periodic"),
+        aliases={"sync": "none"})
+    if name == "none":
         return None
     if name == "homogeneous":
         return HomogeneousClock(delay=int(args[0]) if args else 0)
@@ -124,10 +128,9 @@ def get_clock(spec, seed: int = 0):
         return LognormalClock(d_max=int(args[0]) if args else 4,
                               sigma=float(args[1]) if len(args) > 1 else 1.0,
                               seed=seed)
-    if name == "periodic":
-        return PeriodicClock(d_max=int(args[0]) if args else 4,
-                             period=int(args[1]) if len(args) > 1 else 3)
-    raise ValueError(f"unknown clock model: {spec!r}")
+    # periodic
+    return PeriodicClock(d_max=int(args[0]) if args else 4,
+                         period=int(args[1]) if len(args) > 1 else 3)
 
 
 @dataclass(frozen=True)

@@ -1,0 +1,41 @@
+"""One spec-string grammar for every pluggable-component registry.
+
+Relay policies ("staleness:0.5"), participation schedules ("uniform_k:8"),
+upload clocks ("lognormal:4,1.5") and download clocks all accept the same
+CLI-style shape:  NAME[:ARG[,ARG...]]  — but each module used to hand-roll
+its own `partition(":")` + error message, so typos produced four different
+diagnostics. `parse_spec` is the single tokenizer: it validates the NAME
+against the registry the caller owns and raises ONE uniform error listing
+the valid names, leaving argument semantics (types, defaults) to the
+caller, which knows them.
+
+Used by `repro.relay.get_policy`, `repro.relay.participation.get_schedule`
+and `repro.sim.get_clock` / `get_download_clock`.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+
+def parse_spec(spec, kind: str, names: Sequence[str],
+               aliases: dict = None) -> Tuple[str, List[str]]:
+    """Tokenize "NAME[:ARG[,ARG...]]" and validate NAME.
+
+    spec:    the spec string (anything, str() is applied).
+    kind:    what the registry holds, for the error message — e.g.
+             "relay policy", "clock model", "participation schedule".
+    names:   the registry's valid names.
+    aliases: optional {alias: canonical} applied before validation.
+
+    Returns (name, args) where args is the list of non-empty ","-split
+    argument tokens (possibly empty). Raises ValueError with the uniform
+    message  `unknown <kind>: <spec!r> (have <sorted names>)`  for an
+    unknown name.
+    """
+    name, _, arg = str(spec).partition(":")
+    if aliases and name in aliases:
+        name = aliases[name]
+    if name not in names:
+        raise ValueError(
+            f"unknown {kind}: {spec!r} (have {sorted(names)})")
+    return name, [a for a in arg.split(",") if a] if arg else []

@@ -21,7 +21,7 @@ from repro.core import client as client_lib, collab, prototypes, vec_collab
 from repro.data import partition, synthetic
 from repro.launch import train
 from repro.models import mlp
-from repro.types import CollabConfig, TrainConfig
+from repro.types import CollabConfig, FleetConfig, TrainConfig
 
 SPEC = client_lib.ClientSpec(
     apply=lambda p, x: mlp.apply(p, x),
@@ -35,7 +35,7 @@ CLOCKS = ["homogeneous:1", "lognormal:2", "periodic:2,3"]
 
 
 def _build(engine, policy, clock, schedule=None, mode="cors", n_clients=4,
-           n=192, seed=0, hetero=False):
+           n=192, seed=0, hetero=False, mesh=None):
     x, y = synthetic.class_images(n, seed=0, noise=0.4)
     tx, ty = synthetic.class_images(96, seed=9, noise=0.4)
     parts = partition.uniform_split(x, y, n_clients, seed=1)
@@ -54,7 +54,8 @@ def _build(engine, policy, clock, schedule=None, mode="cors", n_clients=4,
     cls = (collab.CollabTrainer if engine == "seq"
            else vec_collab.VectorizedCollabTrainer)
     return cls(specs, params, parts, (tx, ty), ccfg, tcfg, seed=seed,
-               policy=policy, schedule=schedule, clock=clock)
+               fleet=FleetConfig(policy=policy, participation=schedule,
+                                 clock=clock, mesh=mesh))
 
 
 # ---------------------------------------------------------------------------
@@ -174,7 +175,7 @@ def test_delayed_commit_arrives_preaged_under_staleness():
 
 
 # ---------------------------------------------------------------------------
-# engine mechanics: no retrace, mesh guard, compaction fallback
+# engine mechanics: no retrace, mesh composition, compaction fallback
 # ---------------------------------------------------------------------------
 def test_async_round_step_compiles_once():
     """round_idx and delays are traced args: 3 rounds = 1 compile."""
@@ -184,18 +185,18 @@ def test_async_round_step_compiles_once():
     assert vec._round_step._cache_size() == 1
 
 
-def test_async_rejects_mesh():
+def test_async_composes_with_mesh():
+    """async × mesh used to raise ("pending buffer holds per-client
+    in-flight rows"); under the placement API the pending buffer IS
+    client-sharded (events.out_spec) and the commit payload is the round's
+    one exchange — so it runs, matches the oracle exactly, and still
+    compiles once."""
     from repro import sharding
-    x, y = synthetic.class_images(64, seed=0)
-    with pytest.raises(ValueError, match="mesh"):
-        vec_collab.VectorizedCollabTrainer(
-            [SPEC] * 2,
-            [mlp.init_mlp(k) for k in
-             jax.random.split(jax.random.PRNGKey(0), 2)],
-            partition.uniform_split(x, y, 2, seed=1),
-            synthetic.class_images(32, seed=9),
-            CollabConfig(num_classes=10, d_feature=84), TrainConfig(),
-            clock="lognormal:2", mesh=sharding.client_mesh(1))
+    seq = _build("seq", "staleness", "lognormal:2")
+    vec = _build("vec", "staleness", "lognormal:2",
+                 mesh=sharding.client_mesh(1))
+    _run_matched(seq, vec)
+    assert vec._round_step._cache_size() == 1
 
 
 def test_async_disables_static_k_compaction():

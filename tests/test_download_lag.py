@@ -28,7 +28,7 @@ from repro.data import partition, synthetic
 from repro.launch import train
 from repro.models import mlp
 from repro.relay import history
-from repro.types import CollabConfig, TrainConfig
+from repro.types import CollabConfig, FleetConfig, TrainConfig
 
 SPEC = client_lib.ClientSpec(
     apply=lambda p, x: mlp.apply(p, x),
@@ -42,7 +42,7 @@ DL_CLOCKS = ["homogeneous:1", "lognormal:2", "periodic:2,3"]
 
 
 def _build(engine, policy, dl_clock, clock=None, schedule=None, mode="cors",
-           n_clients=4, n=192, seed=0, hetero=False):
+           n_clients=4, n=192, seed=0, hetero=False, mesh=None):
     x, y = synthetic.class_images(n, seed=0, noise=0.4)
     tx, ty = synthetic.class_images(96, seed=9, noise=0.4)
     parts = partition.uniform_split(x, y, n_clients, seed=1)
@@ -61,8 +61,9 @@ def _build(engine, policy, dl_clock, clock=None, schedule=None, mode="cors",
     cls = (collab.CollabTrainer if engine == "seq"
            else vec_collab.VectorizedCollabTrainer)
     return cls(specs, params, parts, (tx, ty), ccfg, tcfg, seed=seed,
-               policy=policy, schedule=schedule, clock=clock,
-               download_clock=dl_clock)
+               fleet=FleetConfig(policy=policy, participation=schedule,
+                                 clock=clock, download_clock=dl_clock,
+                                 mesh=mesh))
 
 
 # ---------------------------------------------------------------------------
@@ -183,18 +184,16 @@ def test_history_ring_matches_oracle_snapshots():
         history.read_at(vec.hist, h_max - 1), deep)
 
 
-def test_download_lag_rejects_mesh():
+def test_download_lag_composes_with_mesh():
+    """download-lag × mesh used to raise ("history ring is an off-mesh
+    construct"); under the placement API the ring is REPLICATED
+    (history.out_spec) so the per-client stale gathers stay local — it
+    runs, matches the oracle exactly, and still compiles once."""
     from repro import sharding
-    x, y = synthetic.class_images(64, seed=0)
-    with pytest.raises(ValueError, match="off-mesh"):
-        vec_collab.VectorizedCollabTrainer(
-            [SPEC] * 2,
-            [mlp.init_mlp(k) for k in
-             jax.random.split(jax.random.PRNGKey(0), 2)],
-            partition.uniform_split(x, y, 2, seed=1),
-            synthetic.class_images(32, seed=9),
-            CollabConfig(num_classes=10, d_feature=84), TrainConfig(),
-            download_clock="lognormal:2", mesh=sharding.client_mesh(1))
+    seq = _build("seq", "flat", "lognormal:2")
+    vec = _build("vec", "flat", "lognormal:2", mesh=sharding.client_mesh(1))
+    run_matched(seq, vec)
+    assert vec._round_step._cache_size() == 1
 
 
 def test_download_lag_step_compiles_once():

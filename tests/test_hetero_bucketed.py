@@ -19,7 +19,7 @@ from repro import relay as relay_lib
 from repro.core import client as client_lib, collab, vec_collab
 from repro.data import partition, synthetic
 from repro.models import cnn, mlp
-from repro.types import CollabConfig, TrainConfig
+from repro.types import CollabConfig, FleetConfig, TrainConfig
 
 # Two distinct spec OBJECTS (identical callables hash apart on purpose) +
 # two MLP widths: widths alone would already split buckets by param shape,
@@ -66,7 +66,7 @@ def _build(engine, policy, schedule, mode="cors", n_clients=4, n=256,
     cls = (collab.CollabTrainer if engine == "seq"
            else vec_collab.VectorizedCollabTrainer)
     return cls(specs, params, parts, (tx, ty), ccfg, tcfg, seed=seed,
-               policy=policy, schedule=schedule)
+               fleet=FleetConfig(policy=policy, participation=schedule))
 
 
 # ---------------------------------------------------------------------------

@@ -18,7 +18,7 @@ from repro import relay as relay_lib
 from repro.core import client as client_lib, collab, prototypes, vec_collab
 from repro.data import partition, synthetic
 from repro.models import mlp
-from repro.types import CollabConfig, TrainConfig
+from repro.types import CollabConfig, FleetConfig, TrainConfig
 
 SPEC = client_lib.ClientSpec(
     apply=lambda p, x: mlp.apply(p, x),
@@ -42,7 +42,8 @@ def _build(engine, policy, schedule, mode="cors", n_clients=4, n=256,
     cls = (collab.CollabTrainer if engine == "seq"
            else vec_collab.VectorizedCollabTrainer)
     return cls([SPEC] * n_clients, params, parts, (tx, ty), ccfg, tcfg,
-               seed=seed, policy=policy, schedule=schedule)
+               seed=seed,
+               fleet=FleetConfig(policy=policy, participation=schedule))
 
 
 # ---------------------------------------------------------------------------

@@ -5,12 +5,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro import sharding
-from repro.core import client as client_lib, collab, server as server_lib, \
-    vec_collab
+from repro import relay as relay_lib, sharding
+from repro.core import client as client_lib, collab, vec_collab
 from repro.data import partition, synthetic
 from repro.models import cnn, mlp
-from repro.types import CollabConfig, TrainConfig
+from repro.relay import flat as flat_relay
+from repro.types import CollabConfig, FleetConfig, TrainConfig
 
 SPEC = client_lib.ClientSpec(
     apply=lambda p, x: cnn.apply(p, x),
@@ -36,7 +36,7 @@ def _build(mode, engine, n_clients=2, n=384, seed=0, mesh=None):
                                     (tx, ty), ccfg, tcfg, seed=seed)
     return vec_collab.VectorizedCollabTrainer(
         [SPEC] * n_clients, params, parts, (tx, ty), ccfg, tcfg, seed=seed,
-        mesh=mesh)
+        fleet=FleetConfig(mesh=mesh))
 
 
 # ---------------------------------------------------------------------------
@@ -90,15 +90,17 @@ def test_vectorized_is_model_agnostic():
     assert seq.ledger.by_round == vec.ledger.by_round
 
 
-def test_vectorized_shard_map_path_matches():
-    """mesh path (shard_map over the "clients" axis + psum merge) computes
-    the same rounds as the plain vmap path."""
+def test_vectorized_placement_path_matches():
+    """mesh path (placement-resolved jit shardings + one `exchange` per
+    round, relay/placement.py) computes the same rounds as the plain vmap
+    path — and compiles the round step exactly once."""
     plain = _build("cors", "vec")
     mesh = sharding.client_mesh(1)
     mapped = _build("cors", "vec", mesh=mesh)
     for _ in range(2):
         rp, rm = plain.run_round(), mapped.run_round()
         np.testing.assert_allclose(rp["acc_mean"], rm["acc_mean"], atol=2e-2)
+    assert mapped._round_step._cache_size() == 1
 
 
 def test_vectorized_buckets_heterogeneous_specs():
@@ -122,11 +124,16 @@ def test_vectorized_buckets_heterogeneous_specs():
             [SPEC, other], params, parts, (x, y),
             CollabConfig(mode="fedavg", num_classes=10, d_feature=84),
             TrainConfig())
-    with pytest.raises(ValueError, match="mesh"):
-        vec_collab.VectorizedCollabTrainer(
-            [SPEC, other], params, parts, (x, y),
-            CollabConfig(num_classes=10, d_feature=84), TrainConfig(),
-            mesh=sharding.client_mesh(1))
+    # mesh × hetero used to raise; under the placement API each bucket's
+    # stack is client-sharded over the same axis and the shared commit is
+    # the exchange point, so it just runs — and matches the plain path.
+    meshed = vec_collab.VectorizedCollabTrainer(
+        [SPEC, other], params, parts, (x, y),
+        CollabConfig(num_classes=10, d_feature=84), TrainConfig(),
+        fleet=FleetConfig(mesh=sharding.client_mesh(1)))
+    assert meshed.hetero
+    rp, rm = tr.run_round(), meshed.run_round()
+    np.testing.assert_allclose(rp["accs"], rm["accs"], atol=2e-2)
 
 
 def test_client_params_roundtrip():
@@ -141,7 +148,7 @@ def test_client_params_roundtrip():
 # ---------------------------------------------------------------------------
 def _tiny_state(cap=4, C=3, d=2, m_down=1):
     ccfg = CollabConfig(num_classes=C, d_feature=d, m_down=m_down)
-    return server_lib.init_relay_state(ccfg, d, seed=0, capacity=cap)
+    return flat_relay.init_relay_state(ccfg, d, seed=0, capacity=cap)
 
 
 def test_ring_buffer_appends_in_order_and_wraps():
@@ -149,15 +156,15 @@ def test_ring_buffer_appends_in_order_and_wraps():
     assert int(st.ptr) == 1                       # one seeded slot
     rows = lambda v, k: jnp.full((k, 3, 2), float(v))
     vrows = lambda k: jnp.ones((k, 3), bool)
-    st = server_lib.buffer_append(st, rows(1.0, 2), vrows(2),
+    st = flat_relay.buffer_append(st, rows(1.0, 2), vrows(2),
                                   jnp.full((2,), 0, jnp.int32))
-    st = server_lib.buffer_append(st, rows(2.0, 2), vrows(2),
+    st = flat_relay.buffer_append(st, rows(2.0, 2), vrows(2),
                                   jnp.full((2,), 1, jnp.int32))
     # 1 seed + 4 uploads into cap=4: the wrap overwrote slot 0 (the seed)
     assert int(st.ptr) == 1
     np.testing.assert_array_equal(np.asarray(st.owner), [1, 0, 0, 1])
     np.testing.assert_allclose(st.obs[0], 2.0)    # newest won the slot
-    assert not bool(jnp.any(st.owner == server_lib.EMPTY_OWNER))
+    assert not bool(jnp.any(st.owner == relay_lib.EMPTY_OWNER))
 
 
 def test_sample_teacher_excludes_own_uploads():
@@ -169,9 +176,9 @@ def test_sample_teacher_excludes_own_uploads():
         valid=jnp.ones((4, 3), bool),
         owner=jnp.asarray([0, 0, 1, 1], jnp.int32))
     for s in range(8):
-        t = server_lib.sample_teacher(st, 0, 2, jax.random.PRNGKey(s))
+        t = flat_relay.sample_teacher(st, 0, 2, jax.random.PRNGKey(s))
         np.testing.assert_allclose(t["obs"], 1.0)  # never its own (zeros)
-        t = server_lib.sample_teacher(st, 1, 2, jax.random.PRNGKey(s))
+        t = flat_relay.sample_teacher(st, 1, 2, jax.random.PRNGKey(s))
         np.testing.assert_allclose(t["obs"], 0.0)
 
 
@@ -179,10 +186,10 @@ def test_sample_teacher_falls_back_to_own_pool():
     """All filled slots owned by the requester -> fall back to the whole
     filled buffer rather than crashing or returning garbage."""
     st = _tiny_state(cap=2)
-    st = st._replace(owner=jnp.asarray([0, server_lib.EMPTY_OWNER],
+    st = st._replace(owner=jnp.asarray([0, relay_lib.EMPTY_OWNER],
                                        jnp.int32),
                      valid=st.valid.at[0].set(True))
-    t = server_lib.sample_teacher(st, 0, 3, jax.random.PRNGKey(0))
+    t = flat_relay.sample_teacher(st, 0, 3, jax.random.PRNGKey(0))
     assert t["obs"].shape == (3, 3, 2)
     np.testing.assert_allclose(t["obs"], np.broadcast_to(st.obs[0], (3, 3, 2)))
     assert bool(jnp.all(t["valid_o"]))
@@ -194,7 +201,7 @@ def test_sample_teacher_falls_back_to_own_pool():
 # ---------------------------------------------------------------------------
 def test_relay_before_any_upload_is_well_formed():
     ccfg = CollabConfig(num_classes=5, d_feature=3, m_down=2)
-    srv = server_lib.RelayServer(ccfg, 3, seed=0)
+    srv = relay_lib.RelayServer(ccfg, 3, seed=0)
     t = srv.relay(0, 2, jax.random.PRNGKey(0))
     assert set(t) == {"global_protos", "valid_g", "obs", "valid_o",
                       "obs_pick", "mean_logits"}
@@ -203,14 +210,14 @@ def test_relay_before_any_upload_is_well_formed():
     assert bool(jnp.all(jnp.isfinite(t["obs"])))
     # every buffer entry — including server-seeded ones — carries an owner
     assert all("owner" in o for o in srv.obs_buffer)
-    assert {o["owner"] for o in srv.obs_buffer} == {server_lib.SEED_OWNER}
+    assert {o["owner"] for o in srv.obs_buffer} == {relay_lib.SEED_OWNER}
 
 
 def test_relay_on_fully_empty_buffer_returns_invalid_teacher():
     ccfg = CollabConfig(num_classes=4, d_feature=2, m_down=1)
-    st = server_lib.init_relay_state(ccfg, 2, capacity=3)
-    st = st._replace(owner=jnp.full((3,), server_lib.EMPTY_OWNER, jnp.int32))
-    t = server_lib.sample_teacher(st, 0, 1, jax.random.PRNGKey(0))
+    st = flat_relay.init_relay_state(ccfg, 2, capacity=3)
+    st = st._replace(owner=jnp.full((3,), relay_lib.EMPTY_OWNER, jnp.int32))
+    t = flat_relay.sample_teacher(st, 0, 1, jax.random.PRNGKey(0))
     np.testing.assert_allclose(t["obs"], 0.0)
     assert not bool(jnp.any(t["valid_o"]))
 
