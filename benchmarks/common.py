@@ -65,7 +65,8 @@ def make_trainer(mode: str, n_clients: int, *, lambda_kd: float = 10.0,
                  engine: str = "vec", batch_size: int = 32,
                  train_data=None, test_data=None, model: str = "cnn",
                  policy=None, participation=None, hetero: str = None,
-                 clock=None, download_clock=None, mesh=None, fleet=None):
+                 clock=None, download_clock=None, mesh=None, fleet=None,
+                 telemetry=None):
     """Build a trainer without running it. engine: "vec" (default — ALL
     benchmark fleets go through the vectorized engine, homogeneous ones as
     one fused round step and mixed ones bucketed; there is no seq
@@ -84,7 +85,10 @@ def make_trainer(mode: str, n_clients: int, *, lambda_kd: float = 10.0,
     placement-aware device path (repro.relay.placement). fleet: pass a
     ready-made `repro.types.FleetConfig` instead of the loose
     policy/participation/clock/download_clock/mesh kwargs (mixing both is
-    an error, mirroring `resolve_fleet`)."""
+    an error, mirroring `resolve_fleet`). telemetry: forwarded to the
+    trainer (True or a repro.obs.TelemetryConfig; None = off — the
+    benchmark default, so timings measure the telemetry-free program; the
+    `telemetry` CI gate measures the on/off delta explicitly)."""
     if train_data is None or test_data is None:
         (x, y), test = data(seed)
     else:
@@ -122,7 +126,7 @@ def make_trainer(mode: str, n_clients: int, *, lambda_kd: float = 10.0,
             f"pass fleet=FleetConfig(...) OR loose kwargs, not both; got "
             f"fleet and {sorted(loose)}")
     return cls(specs, params, parts, test, ccfg, tcfg, seed=seed,
-               fleet=fleet)
+               fleet=fleet, telemetry=telemetry)
 
 
 def run_mode(mode: str, n_clients: int, rounds: int = None, *,

@@ -9,6 +9,7 @@ import os
 
 import jax
 
+from repro import obs
 from repro.checkpoint import save_pytree
 from repro.core import client as client_lib, collab, vec_collab
 from repro.data import partition, synthetic
@@ -56,6 +57,11 @@ def main():
                          "history ring (src/repro/relay/history.py) — "
                          "e.g. periodic:3,4 is a duty-cycled fleet "
                          "training against up-to-3-round-stale syncs")
+    ap.add_argument("--telemetry-out", default=None, metavar="RUN.jsonl",
+                    help="stream per-round telemetry records to this JSONL "
+                         "file (render with `python -m repro.obs.report "
+                         "RUN.jsonl`); telemetry metrics are on either "
+                         "way — this adds the durable sink")
     ap.add_argument("--out", default="artifacts/collab_ckpt")
     args = ap.parse_args()
 
@@ -90,25 +96,27 @@ def main():
            else collab.CollabTrainer)
     trainer = cls(specs, params, parts,
                   (tx, ty), ccfg, TrainConfig(batch_size=32), seed=0,
+                  telemetry=obs.TelemetryConfig(jsonl=args.telemetry_out),
                   fleet=FleetConfig(policy=args.relay_policy,
                                     participation=args.participation,
                                     clock=args.clock_model,
                                     download_clock=args.download_clock))
     trainer.run(args.rounds, log_every=max(1, args.rounds // 15))
-    late = sum(1 for h in trainer.history
-               for b, _ in h.get("commits", []) if b < h["round"] - 1)
+    # fleet health from the engine's own telemetry (repro.obs) — the same
+    # counters both engines oracle-check, not recomputed driver-side
+    telem = [h["telemetry"] for h in trainer.history]
+    late = sum(sum(t["commit_hist"][1:]) for t in telem)
     if late:
         print(f"async relay: {late} uploads committed late "
               f"(event-ordered, see src/repro/relay/events.py)")
-    if trainer._lagged:    # download clock bound and mode downloads
-        stale = 0
-        for h in trainer.history:
-            dl = trainer.dl_clock.delays(h["round"] - 1, args.clients)
-            stale += sum(int(dl[i] > 0) for i in h["participants"])
-        if stale:
-            print(f"download lag: {stale} client-rounds trained against a "
-                  f"stale relay snapshot (history ring, see "
-                  f"src/repro/relay/history.py)")
+    stale = sum(t["stale_reads"] for t in telem)
+    if stale:
+        print(f"download lag: {stale} client-rounds trained against a "
+              f"stale relay snapshot (history ring, see "
+              f"src/repro/relay/history.py)")
+    if args.telemetry_out:
+        print(f"telemetry: {args.telemetry_out} (render with "
+              f"`python -m repro.obs.report {args.telemetry_out}`)")
 
     os.makedirs(args.out, exist_ok=True)
     for i in range(args.clients):

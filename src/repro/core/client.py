@@ -133,6 +133,10 @@ def make_local_update_fn(spec: ClientSpec, ccfg: CollabConfig,
             p, o = carry
             batch, k = batch_and_key
             (_, metrics), grads = grad_fn(p, batch, teacher, k)
+            # global grad norm, from the grads the step already computed —
+            # the per-bucket health signal the telemetry layer aggregates
+            metrics["grad_norm"] = jnp.sqrt(sum(
+                jnp.sum(jnp.square(g)) for g in jax.tree.leaves(grads)))
             p, o = adam_update(p, grads, o, lr=tcfg.learning_rate,
                                b1=tcfg.beta1, b2=tcfg.beta2, eps=tcfg.eps)
             return (p, o), metrics
@@ -158,7 +162,7 @@ def zero_metrics(ccfg: CollabConfig) -> Dict:
     """The metrics record of a client that SKIPPED the round (partial
     participation): all-zero floats with exactly the keys `loss_fn` emits
     for this mode, so per-round records keep one entry per client."""
-    m = {"ce": 0.0, "total": 0.0}
+    m = {"ce": 0.0, "total": 0.0, "grad_norm": 0.0}
     if ccfg.mode == "cors":
         m.update(kd=0.0, disc=0.0, mi_bound=0.0)
     elif ccfg.mode == "fd":

@@ -69,7 +69,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import relay as relay_lib, sim
+from repro import obs, relay as relay_lib, sim
 from repro.core import baselines, client as client_lib, comm
 from repro.optim import adam_init
 from repro.relay import events
@@ -102,7 +102,7 @@ class CollabTrainer:
                  test_data: Tuple[jax.Array, jax.Array],
                  ccfg: CollabConfig, tcfg: TrainConfig, seed: int = 0,
                  fleet=None, policy=None, schedule=None, clock=None,
-                 download_clock=None):
+                 download_clock=None, telemetry=None):
         fleet = resolve_fleet(fleet, policy=policy, schedule=schedule,
                               clock=clock, download_clock=download_clock)
         if fleet.mesh is not None:
@@ -120,9 +120,26 @@ class CollabTrainer:
         # Relay-write order shared with the bucketed vectorized engine:
         # bucket by bucket, client-id order within a bucket (identity for
         # homogeneous fleets). See the module docstring.
-        self._upload_order = [
-            i for _, ids in client_lib.bucketize(specs, params_list)
-            for i in ids]
+        buckets = client_lib.bucketize(specs, params_list)
+        self._upload_order = [i for _, ids in buckets for i in ids]
+        # Telemetry (repro.obs): the oracle computes the SAME jitted
+        # telemetry function over its bit-equal ring state, so run_matched
+        # can pin the integer leaves across engines; the event-log
+        # quantities it already tracks host-side (commit lags, queue depth)
+        # go in as small arrays.
+        self.telemetry = obs.resolve(telemetry)
+        self._telem = self.telemetry is not None and self.telemetry.metrics
+        self._bucket_ids = [np.asarray(ids, np.int64) for _, ids in buckets]
+        self._telem_fn = (obs.metrics.make_host_telemetry_fn(len(specs))
+                          if self._telem else None)
+        self._sink = (obs.JsonlWriter(self.telemetry.jsonl)
+                      if self.telemetry and self.telemetry.jsonl else None)
+        self._tracer = (obs.TraceRecorder(path=self.telemetry.trace,
+                                          profile=self.telemetry.profile)
+                        if self.telemetry and (self.telemetry.trace
+                                               or self.telemetry.profile)
+                        else None)
+        self._span = self._tracer.span if self._tracer else obs.null_span
         self.clock = sim.get_clock(fleet.clock, seed=seed)
         self._queue = events.HostEventQueue()
         self.policy = relay_lib.get_policy(fleet.policy)
@@ -181,23 +198,28 @@ class CollabTrainer:
         # d(client, r) rounds before that (its last completed sync).
         dl = (self.dl_clock.delays(r, N) if self._lagged
               else np.zeros((N,), np.int64))
+        prev_state = self.server.state
         teachers: Dict[int, Dict] = {}
-        for i in present:
-            teachers[i] = (self.server.relay(i, max(1, ccfg.m_down),
-                                             relay_ks[i],
-                                             state=self._snapshot(int(dl[i])))
-                           if mode in ("cors", "fd")
-                           else client_lib.empty_teacher(ccfg))
+        with self._span("teacher_read", round=r) as sp:
+            for i in present:
+                teachers[i] = (self.server.relay(
+                    i, max(1, ccfg.m_down), relay_ks[i],
+                    state=self._snapshot(int(dl[i])))
+                    if mode in ("cors", "fd")
+                    else client_lib.empty_teacher(ccfg))
+            sp.block(teachers)
 
         # phase 2 — local updates (Algorithm 2); absent clients are frozen
         metrics_all = [jax.tree.map(float, client_lib.zero_metrics(ccfg))
                        for _ in range(N)]
-        for i in present:
-            c = self.clients[i]
-            c.params, c.opt_state, m = self._updaters[i](
-                c.params, c.opt_state, self._batches(c), teachers[i],
-                upd_ks[i])
-            metrics_all[i] = jax.tree.map(float, m)
+        with self._span("update", round=r) as sp:
+            for i in present:
+                c = self.clients[i]
+                c.params, c.opt_state, m = self._updaters[i](
+                    c.params, c.opt_state, self._batches(c), teachers[i],
+                    upd_ks[i])
+                metrics_all[i] = jax.tree.map(float, m)
+            sp.block([c.params for c in self.clients])
 
         # phase 3 — uplink + server merge (Algorithm 1). Present clients'
         # fresh uploads enter the event queue with their clock-model commit
@@ -210,21 +232,24 @@ class CollabTrainer:
         commits: List[Tuple[int, int]] = [(r, int(i)) for i in present]
         if mode in ("cors", "fd"):
             birth_clock = int(self.server.state.clock)
-            for pos, i in enumerate(self._upload_order):
-                if not mask[i]:
-                    continue
-                c = self.clients[i]
-                payload = self._upload_fn(c.spec)(c.params, c.data_x,
-                                                  c.data_y, upl_ks[i])
-                self._queue.push(birth=r, pos=pos, client_id=i,
-                                 stamp=birth_clock, payload=payload,
-                                 delay=int(delays[i]))
-            due = self._queue.pop_due(r)
-            self.server.begin_round()
-            for birth, pos, cid, stamp, payload, _ in due:
-                self.server.upload(cid, payload, stamp=stamp)
-            if due:
-                self.server.end_round()
+            with self._span("upload", round=r):
+                for pos, i in enumerate(self._upload_order):
+                    if not mask[i]:
+                        continue
+                    c = self.clients[i]
+                    payload = self._upload_fn(c.spec)(c.params, c.data_x,
+                                                      c.data_y, upl_ks[i])
+                    self._queue.push(birth=r, pos=pos, client_id=i,
+                                     stamp=birth_clock, payload=payload,
+                                     delay=int(delays[i]))
+            with self._span("commit", round=r) as sp:
+                due = self._queue.pop_due(r)
+                self.server.begin_round()
+                for birth, pos, cid, stamp, payload, _ in due:
+                    self.server.upload(cid, payload, stamp=stamp)
+                if due:
+                    self.server.end_round()
+                sp.block(self.server.state)
             commits = [(birth, cid) for birth, pos, cid, *_ in due]
 
         if mode == "fedavg" and len(present):
@@ -250,7 +275,8 @@ class CollabTrainer:
                         if mode == "fedavg" else 0))
         self.ledger.log_round(up, down)
 
-        accs = [self.evaluate(c) for c in self.clients]
+        with self._span("eval", round=r):
+            accs = [self.evaluate(c) for c in self.clients]
         rec = {"round": len(self.history) + 1,
                "acc_mean": float(np.mean(accs)),
                "acc_std": float(np.std(accs)),
@@ -259,7 +285,32 @@ class CollabTrainer:
                "participants": present.tolist(),
                "commits": [[b, c] for b, c in commits],
                "comm_up": up, "comm_down": down}
+        if self._telem:
+            # host-counted event-log quantities: this round's commit lags
+            # (commit round − birth round, clipped like the in-jit bins)
+            # and the uploads still parked in the queue after pop_due
+            chist = np.zeros((obs.STALE_BINS,), np.int32)
+            for birth, _cid in commits:
+                chist[min(r - birth, obs.STALE_BINS - 1)] += 1
+            mask_parts = tuple(jnp.asarray(mask[ids])
+                               for ids in self._bucket_ids)
+            loss_parts = tuple(
+                np.asarray([metrics_all[i]["total"] for i in ids],
+                           np.float32) for ids in self._bucket_ids)
+            gnorm_parts = tuple(
+                np.asarray([metrics_all[i]["grad_norm"] for i in ids],
+                           np.float32) for ids in self._bucket_ids)
+            telem = self._telem_fn(
+                prev_state, self.server.state, jnp.asarray(mask),
+                mask_parts, loss_parts, gnorm_parts, jnp.asarray(chist),
+                jnp.asarray(len(self._queue), jnp.int32),
+                jnp.asarray(dl, jnp.int32))
+            rec["telemetry"] = obs.to_record(telem)
         self.history.append(rec)
+        if self._sink is not None:
+            self._sink.write(rec)
+        if self._tracer is not None and self.telemetry.trace:
+            self._tracer.write()
         return rec
 
     def run(self, rounds: int, log_every: int = 0) -> List[Dict]:

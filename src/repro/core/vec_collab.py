@@ -114,7 +114,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import relay as relay_lib, sim
+from repro import obs, relay as relay_lib, sim
 from repro.core import baselines, client as client_lib, collab, comm, \
     prototypes
 from repro.optim import adam_init
@@ -276,7 +276,8 @@ def _client_rep(mesh):
 
 def make_async_round_step(spec: client_lib.ClientSpec, ccfg: CollabConfig,
                           tcfg: TrainConfig, policy: relay_lib.RelayPolicy,
-                          lagged: bool = False, mesh=None, templates=None):
+                          lagged: bool = False, mesh=None, templates=None,
+                          telemetry: bool = False):
     """The homogeneous ASYNC round step (bounded-delay uploads,
     relay/events.py): phases 1-2 exactly as the synchronous step, then ONE
     `events.commit_and_park` — commit every due event (pending uploads
@@ -300,7 +301,14 @@ def make_async_round_step(spec: client_lib.ClientSpec, ccfg: CollabConfig,
     examples): jit the SAME traced body with in/out shardings resolved
     from the placement declarations — client state and the pending buffer
     CLIENT_SHARDED, relay/history REPLICATED — and mark the commit payload
-    as the round's one exchange (`commit_and_park(..., mesh=mesh)`)."""
+    as the round's one exchange (`commit_and_park(..., mesh=mesh)`).
+
+    `telemetry=True` (a STATIC build flag, so the telemetry-off program is
+    byte-identical to a telemetry-free build): append an in-jit
+    `obs.RoundTelemetry` — REPLICATED on a mesh (obs.metrics.out_spec) —
+    as the step's last output, computed from state the step already holds
+    (round-start vs post-commit relay state, the pre-commit pending
+    buffer's due events, this round's mask/delays)."""
     mode = ccfg.mode
     assert mode in ("cors", "fd"), mode
     local_update = client_lib.make_local_update_fn(spec, ccfg, tcfg)
@@ -309,28 +317,43 @@ def make_async_round_step(spec: client_lib.ClientSpec, ccfg: CollabConfig,
 
     def step(params, opt, rstate, pending, batches, data_x, data_y, ids,
              relay_ks, upd_ks, upl_ks, mask, delays, round_idx, *lag):
+        rstate0, pending0 = rstate, pending
         # phases 1-2 — downlink from the COMMITTED state of the client's
         # last sync (round start, or dl[i] rounds earlier under download
         # lag; in-flight uploads are invisible either way) + local
         # updates; absent clients freeze
-        teacher = (teachers(lag[0], ids, relay_ks, lag[1]) if lagged
-                   else teachers(rstate, ids, relay_ks))
-        new_p, new_o, metrics = jax.vmap(local_update)(
-            params, opt, batches, teacher, upd_ks)
-        p_s = freeze_absent(mask, new_p, params)
-        o_s = freeze_absent(mask, new_o, opt)
-        metrics = jax.tree.map(
-            lambda m: jnp.where(_bcast(mask, m), m, 0.0), metrics)
+        with jax.named_scope("teacher_read"):
+            teacher = (teachers(lag[0], ids, relay_ks, lag[1]) if lagged
+                       else teachers(rstate, ids, relay_ks))
+        with jax.named_scope("update"):
+            new_p, new_o, metrics = jax.vmap(local_update)(
+                params, opt, batches, teacher, upd_ks)
+            p_s = freeze_absent(mask, new_p, params)
+            o_s = freeze_absent(mask, new_o, opt)
+            metrics = jax.tree.map(
+                lambda m: jnp.where(_bcast(mask, m), m, 0.0), metrics)
         # phase 3 — the event log's single relay write (and, on a mesh,
         # the round's single cross-device exchange)
-        fresh = per_client(p_s, data_x, data_y, upl_ks, ids)
-        rstate, pending = relay_lib.events.commit_and_park(
-            policy, rstate, pending, fresh, round_idx, delays, mask,
-            mesh=mesh)
+        with jax.named_scope("upload"):
+            fresh = per_client(p_s, data_x, data_y, upl_ks, ids)
+        with jax.named_scope("commit"):
+            rstate, pending = relay_lib.events.commit_and_park(
+                policy, rstate, pending, fresh, round_idx, delays, mask,
+                mesh=mesh)
+        tail = ()
+        if telemetry:
+            with jax.named_scope("telemetry"):
+                tail = (obs.round_telemetry(
+                    rstate0, rstate, mask.shape[0], mask=mask,
+                    loss_parts=(metrics["total"],),
+                    gnorm_parts=(metrics["grad_norm"],),
+                    mask_parts=(mask,), pending=pending,
+                    pending_pre=pending0, round_idx=round_idx,
+                    delays=delays, dl=lag[1] if lagged else None),)
         if lagged:
             hist = relay_lib.history.push(lag[0], rstate)
-            return p_s, o_s, rstate, pending, hist, metrics
-        return p_s, o_s, rstate, pending, metrics
+            return (p_s, o_s, rstate, pending, hist, metrics) + tail
+        return (p_s, o_s, rstate, pending, metrics) + tail
 
     if mesh is None:
         return jax.jit(step)
@@ -345,7 +368,8 @@ def make_async_round_step(spec: client_lib.ClientSpec, ccfg: CollabConfig,
             relay_lib.history.out_spec(templates["hist"]), mesh)
         in_sh += (hspec, cl)
         out_sh += (hspec,)
-    return jax.jit(step, in_shardings=in_sh, out_shardings=out_sh + (cl,))
+    out_sh += (cl,) + ((rep,) if telemetry else ())
+    return jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)
 
 
 def make_async_relay_commit(policy: relay_lib.RelayPolicy,
@@ -486,10 +510,23 @@ class VectorizedCollabTrainer:
                  test_data: Tuple[jax.Array, jax.Array],
                  ccfg: CollabConfig, tcfg: TrainConfig, seed: int = 0,
                  fleet=None, mesh=None, policy=None, schedule=None,
-                 clock=None, download_clock=None):
+                 clock=None, download_clock=None, telemetry=None):
         fleet = resolve_fleet(fleet, mesh=mesh, policy=policy,
                               schedule=schedule, clock=clock,
                               download_clock=download_clock)
+        # Observability (repro.obs): in-jit RoundTelemetry is a STATIC
+        # build flag on the round steps (off -> traced program unchanged);
+        # sinks/tracing are host-side round-record plumbing.
+        self.telemetry = obs.resolve(telemetry)
+        self._telem = self.telemetry is not None and self.telemetry.metrics
+        self._sink = (obs.JsonlWriter(self.telemetry.jsonl)
+                      if self.telemetry and self.telemetry.jsonl else None)
+        self._tracer = (obs.TraceRecorder(path=self.telemetry.trace,
+                                          profile=self.telemetry.profile)
+                        if self.telemetry and (self.telemetry.trace
+                                               or self.telemetry.profile)
+                        else None)
+        self._span = self._tracer.span if self._tracer else obs.null_span
         if isinstance(specs, client_lib.ClientSpec):
             specs = [specs] * len(params_list)
         assert len(specs) == len(params_list) == len(client_data)
@@ -615,7 +652,8 @@ class VectorizedCollabTrainer:
                 mesh=mesh,
                 templates={"rstate": self.relay_state,
                            "pending": self.pending,
-                           "hist": self.hist if self._lagged else None})
+                           "hist": self.hist if self._lagged else None},
+                telemetry=self._telem)
             if self._async else self._make_round_step())
         self._eval_hits = make_eval_hits(self.spec)
 
@@ -679,6 +717,13 @@ class VectorizedCollabTrainer:
             if self._async
             else make_relay_commit(self.policy, lagged=self._lagged,
                                    mesh=self.mesh))
+        if self._telem:
+            # the bucketed round has no single step to fuse telemetry
+            # into (one jit per bucket + the shared commit), so it runs
+            # one extra small jitted summary after the commit
+            self._telem_fn = obs.metrics.make_telemetry_fn(
+                self.n_clients, asynchronous=self._async,
+                lagged=self._lagged)
 
     # ------------------------------------------------------------------
     def client_params(self, i: int):
@@ -694,6 +739,7 @@ class VectorizedCollabTrainer:
         N, mesh, policy = self.n_clients, self.mesh, self.policy
         mode = ccfg.mode
         lagged = self._lagged
+        telem = self._telem        # static: off -> the trace is unchanged
         local_update = client_lib.make_local_update_fn(spec, ccfg, tcfg)
         teachers = make_teacher_phase(policy, ccfg, lagged=lagged)
         uploads_of = make_upload_phase(spec, ccfg)
@@ -711,6 +757,7 @@ class VectorizedCollabTrainer:
             # is jitted under the placement-resolved shardings below and
             # GSPMD inserts the collectives at the exchange.
             hist, dl = lag if lagged else (None, None)
+            rstate0 = rstate
             # phase 0 — participant gather: the round runs on the
             # idx-selected (k, ...) block (identity permutation under full
             # participation).
@@ -735,37 +782,46 @@ class VectorizedCollabTrainer:
 
             # phase 1 — downlink (vmapped relay sampling from the buffers;
             # under download lag, from each client's own stale snapshot)
-            teacher = (teachers(hist, ids_s, rk, dl_s) if lagged
-                       else teachers(rstate, ids_s, rk))
+            with jax.named_scope("teacher_read"):
+                teacher = (teachers(hist, ids_s, rk, dl_s) if lagged
+                           else teachers(rstate, ids_s, rk))
 
             # phase 2 — all local updates in one vmap (Algorithm 2 × k)
-            new_p, new_o, metrics = jax.vmap(local_update)(
-                p_s, o_s, b_s, teacher, uk)
-            p_s, o_s = keep(new_p, p_s), keep(new_o, o_s)
-            metrics = jax.tree.map(
-                lambda m: jnp.where(_bcast(sub_mask, m), m, 0.0), metrics)
+            with jax.named_scope("update"):
+                new_p, new_o, metrics = jax.vmap(local_update)(
+                    p_s, o_s, b_s, teacher, uk)
+                p_s, o_s = keep(new_p, p_s), keep(new_o, o_s)
+                metrics = jax.tree.map(
+                    lambda m: jnp.where(_bcast(sub_mask, m), m, 0.0),
+                    metrics)
 
             # phase 3 — uplink + merge (Algorithm 1): absent clients'
             # prototype sums are zero-weighted and their observation rows
             # dropped from the ring WITHOUT consuming slots; a round with
             # zero participants leaves the relay state untouched.
             if mode in ("cors", "fd"):
-                proto, logit, obs_rows, valid_rows, owner_rows, row_mask = \
-                    uploads_of(p_s, dx, dy, ok, ids_s, sub_mask)
+                with jax.named_scope("upload"):
+                    (proto, logit, obs_rows, valid_rows, owner_rows,
+                     row_mask) = uploads_of(p_s, dx, dy, ok, ids_s,
+                                            sub_mask)
                 # THE cross-device exchange (relay/placement.py): the
                 # upload payload becomes replicated here — GSPMD lowers it
                 # to the observation all-gather + the paper's O(C·d')
                 # prototype all-reduce. No-op off-mesh.
-                (proto, logit, obs_rows, valid_rows, owner_rows,
-                 row_mask) = placement.exchange(
+                with jax.named_scope("exchange"):
                     (proto, logit, obs_rows, valid_rows, owner_rows,
-                     row_mask), mesh)
-                new_rstate = policy.append(rstate, obs_rows, valid_rows,
-                                           owner_rows, row_mask)
-                new_rstate = policy.merge_round(new_rstate, proto, logit)
-                rstate = jax.tree.map(
-                    lambda n, o: jnp.where(any_present, n, o),
-                    new_rstate, rstate)
+                     row_mask) = placement.exchange(
+                        (proto, logit, obs_rows, valid_rows, owner_rows,
+                         row_mask), mesh)
+                with jax.named_scope("commit"):
+                    new_rstate = policy.append(rstate, obs_rows,
+                                               valid_rows, owner_rows,
+                                               row_mask)
+                    new_rstate = policy.merge_round(new_rstate, proto,
+                                                    logit)
+                    rstate = jax.tree.map(
+                        lambda n, o: jnp.where(any_present, n, o),
+                        new_rstate, rstate)
 
             if mode == "fedavg":
                 denom = jnp.maximum(n_present, 1.0)
@@ -791,13 +847,24 @@ class VectorizedCollabTrainer:
                                         m.dtype).at[idx].set(m), metrics)
             else:
                 params, opt, metrics_full = p_s, o_s, metrics
+            tail = ()
+            if telem:
+                # synchronous commit lag is always 0, so the commit hist
+                # collapses to bin 0 = n_present (the oracle's commit-list
+                # length); stale reads come from the full-width dl vector.
+                with jax.named_scope("telemetry"):
+                    tail = (obs.round_telemetry(
+                        rstate0, rstate, N, mask=mask,
+                        loss_parts=(metrics_full["total"],),
+                        gnorm_parts=(metrics_full["grad_norm"],),
+                        mask_parts=(mask,), dl=dl),)
             if lagged:
                 # ring advance is UNCONDITIONAL (unlike the relay write):
                 # a zero-participant round still snapshots the unchanged
                 # state, so "d rounds ago" always means rounds, not merges.
                 hist = relay_lib.history.push(hist, rstate)
-                return params, opt, rstate, hist, metrics_full
-            return params, opt, rstate, metrics_full
+                return (params, opt, rstate, hist, metrics_full) + tail
+            return (params, opt, rstate, metrics_full) + tail
 
         if mesh is None:
             return jax.jit(round_core)
@@ -816,8 +883,9 @@ class VectorizedCollabTrainer:
                 relay_lib.history.out_spec(self.hist), mesh)
             in_sh += (hspec, cl)
             out_sh += (hspec,)
+        out_sh += (cl,) + ((rep,) if telem else ())
         return jax.jit(round_core, in_shardings=in_sh,
-                       out_shardings=out_sh + (cl,))
+                       out_shardings=out_sh)
 
     # ------------------------------------------------------------------
     def _round_commits(self, r: int, mask_np, delays_np):
@@ -855,16 +923,20 @@ class VectorizedCollabTrainer:
         lag = ((self.hist,
                 jnp.asarray(self.dl_clock.delays(r, N), jnp.int32))
                if self._lagged else ())
+        telem = None
         if self._async:
             # Full-width async step: round_idx/delays are traced, so the
             # event timeline never retraces; the pending buffer threads
             # through like the relay state.
-            out = self._round_step(
-                self.params, self.opt_state, self.relay_state, self.pending,
-                self.batches, self.data_x, self.data_y, ids,
-                relay_ks, upd_ks, upl_ks, mask,
-                jnp.asarray(delays_np, jnp.int32),
-                jnp.asarray(r, jnp.int32), *lag)
+            with self._span("round_step", round=r) as sp:
+                out = sp.block(self._round_step(
+                    self.params, self.opt_state, self.relay_state,
+                    self.pending, self.batches, self.data_x, self.data_y,
+                    ids, relay_ks, upd_ks, upl_ks, mask,
+                    jnp.asarray(delays_np, jnp.int32),
+                    jnp.asarray(r, jnp.int32), *lag))
+            if self._telem:
+                *out, telem = out
             if self._lagged:
                 (self.params, self.opt_state, self.relay_state,
                  self.pending, self.hist, metrics) = out
@@ -880,11 +952,13 @@ class VectorizedCollabTrainer:
             else:
                 idx_np = np.arange(N)
             idx = jnp.asarray(idx_np, jnp.int32)
-            out = self._round_step(self.params, self.opt_state,
-                                   self.relay_state,
-                                   self.batches, self.data_x, self.data_y,
-                                   ids, relay_ks, upd_ks, upl_ks, mask, idx,
-                                   *lag)
+            with self._span("round_step", round=r) as sp:
+                out = sp.block(self._round_step(
+                    self.params, self.opt_state, self.relay_state,
+                    self.batches, self.data_x, self.data_y,
+                    ids, relay_ks, upd_ks, upl_ks, mask, idx, *lag))
+            if self._telem:
+                *out, telem = out
             if self._lagged:
                 (self.params, self.opt_state, self.relay_state, self.hist,
                  metrics) = out
@@ -903,7 +977,8 @@ class VectorizedCollabTrainer:
         metrics_np = jax.tree.map(np.asarray, metrics)
         metrics_all = [jax.tree.map(lambda v: float(v[i]), metrics_np)
                        for i in range(N)]
-        return self._log_round(present, up, down, metrics_all, commits)
+        return self._log_round(present, up, down, metrics_all, commits,
+                               telemetry=telem)
 
     def _run_round_bucketed(self) -> Dict:
         """One synchronous round across all buckets: every bucket's step
@@ -927,45 +1002,73 @@ class VectorizedCollabTrainer:
         # per bucket like the keys and the participation mask.
         dl_np = (np.asarray(self.dl_clock.delays(r, N), np.int64)
                  if self._lagged else None)
+        pending0 = self.pending if self._async else None
         payloads, metrics_parts = [], []
-        for b in self.buckets:
-            ids_j = jnp.asarray(b.ids, jnp.int32)
-            lag_b = ((jnp.asarray(dl_np[b.ids], jnp.int32),)
-                     if self._lagged else ())
-            b.params, b.opt, metrics, payload = b.step(
-                b.params, b.opt,
-                self.hist if self._lagged else rstate0,
-                b.batches, b.data_x, b.data_y,
-                ids_j, relay_ks[b.ids], upd_ks[b.ids], upl_ks[b.ids],
-                jnp.asarray(mask_np[b.ids]), *lag_b)
-            metrics_parts.append(metrics)
-            payloads.append(payload)
+        with self._span("bucket_steps", round=r) as sp:
+            for b in self.buckets:
+                ids_j = jnp.asarray(b.ids, jnp.int32)
+                lag_b = ((jnp.asarray(dl_np[b.ids], jnp.int32),)
+                         if self._lagged else ())
+                b.params, b.opt, metrics, payload = b.step(
+                    b.params, b.opt,
+                    self.hist if self._lagged else rstate0,
+                    b.batches, b.data_x, b.data_y,
+                    ids_j, relay_ks[b.ids], upd_ks[b.ids], upl_ks[b.ids],
+                    jnp.asarray(mask_np[b.ids]), *lag_b)
+                metrics_parts.append(metrics)
+                payloads.append(payload)
+            sp.block(metrics_parts)
 
         hist_lag = (self.hist,) if self._lagged else ()
-        if self._async:
-            # The shared commit runs EVERY round: pending uploads can be
-            # due even when nobody trains (and it no-ops when the commit
-            # set is empty). mask/delays permuted to upload order, like
-            # the concatenated payloads and the pending buffer.
-            perm = self._upload_order
-            out = self._relay_commit(
-                rstate0, self.pending, tuple(payloads),
-                jnp.asarray(r, jnp.int32),
-                jnp.asarray(delays_np[perm], jnp.int32),
-                jnp.asarray(mask_np[perm]), *hist_lag)
+        with self._span("commit", round=r) as sp:
+            if self._async:
+                # The shared commit runs EVERY round: pending uploads can
+                # be due even when nobody trains (and it no-ops when the
+                # commit set is empty). mask/delays permuted to upload
+                # order, like the concatenated payloads and the pending
+                # buffer.
+                perm = self._upload_order
+                out = self._relay_commit(
+                    rstate0, self.pending, tuple(payloads),
+                    jnp.asarray(r, jnp.int32),
+                    jnp.asarray(delays_np[perm], jnp.int32),
+                    jnp.asarray(mask_np[perm]), *hist_lag)
+                if self._lagged:
+                    self.relay_state, self.pending, self.hist = out
+                else:
+                    self.relay_state, self.pending = out
+            elif mode in ("cors", "fd") and present.size:
+                out = self._relay_commit(rstate0, tuple(payloads),
+                                         *hist_lag)
+                if self._lagged:
+                    self.relay_state, self.hist = out
+                else:
+                    self.relay_state = out
+            elif self._lagged:
+                # relay untouched this round, but the ring still advances
+                self.hist = self._hist_push(self.hist, rstate0)
+            sp.block(self.relay_state)
+
+        telem = None
+        if self._telem:
+            # per-bucket loss/grad-norm parts in bucket order; the commit
+            # quantities are permutation-invariant counts, so mask/delays
+            # go in ORIGINAL client-id order (the pending buffer's due
+            # events carry their own birth rounds)
+            mask_parts = tuple(jnp.asarray(mask_np[b.ids])
+                               for b in self.buckets)
+            loss_parts = tuple(m["total"] for m in metrics_parts)
+            gnorm_parts = tuple(m["grad_norm"] for m in metrics_parts)
+            rest = ()
+            if self._async:
+                rest += (pending0, self.pending,
+                         jnp.asarray(r, jnp.int32),
+                         jnp.asarray(delays_np, jnp.int32))
             if self._lagged:
-                self.relay_state, self.pending, self.hist = out
-            else:
-                self.relay_state, self.pending = out
-        elif mode in ("cors", "fd") and present.size:
-            out = self._relay_commit(rstate0, tuple(payloads), *hist_lag)
-            if self._lagged:
-                self.relay_state, self.hist = out
-            else:
-                self.relay_state = out
-        elif self._lagged:
-            # relay untouched this round, but the ring still advances
-            self.hist = self._hist_push(self.hist, rstate0)
+                rest += (jnp.asarray(dl_np, jnp.int32),)
+            telem = self._telem_fn(
+                rstate0, self.relay_state, jnp.asarray(mask_np),
+                mask_parts, loss_parts, gnorm_parts, *rest)
 
         up, down = comm.round_floats(
             mode, n_present=int(present.size), n_commit=len(commits),
@@ -980,10 +1083,13 @@ class VectorizedCollabTrainer:
             for j, i in enumerate(b.ids):
                 metrics_all[int(i)] = jax.tree.map(lambda v: float(v[j]),
                                                    m_np)
-        return self._log_round(present, up, down, metrics_all, commits)
+        return self._log_round(present, up, down, metrics_all, commits,
+                               telemetry=telem)
 
-    def _log_round(self, present, up, down, metrics_all, commits) -> Dict:
-        accs = self.evaluate_all()
+    def _log_round(self, present, up, down, metrics_all, commits,
+                   telemetry=None) -> Dict:
+        with self._span("eval"):
+            accs = self.evaluate_all()
         rec = {"round": len(self.history) + 1,
                "acc_mean": float(np.mean(accs)),
                "acc_std": float(np.std(accs)),
@@ -992,7 +1098,13 @@ class VectorizedCollabTrainer:
                "participants": present.tolist(),
                "commits": [[b, c] for b, c in commits],
                "comm_up": up, "comm_down": down}
+        if telemetry is not None:
+            rec["telemetry"] = obs.to_record(telemetry)
         self.history.append(rec)
+        if self._sink is not None:
+            self._sink.write(rec)
+        if self._tracer is not None and self.telemetry.trace:
+            self._tracer.write()
         return rec
 
     def run(self, rounds: int, log_every: int = 0) -> List[Dict]:

@@ -303,6 +303,22 @@ def make_download_lag_round_sync(ccfg: CollabConfig, h_max: int):
     return init_history, round_sync, read_at
 
 
+def proto_round_telemetry(prev: prototypes.ProtoState,
+                          new: prototypes.ProtoState) -> Dict[str, Any]:
+    """One round's prototype-level observability for the LM-scale path,
+    which shares no relay ring with the collaborative engines and so gets
+    the ProtoState-reducible subset of repro.obs's RoundTelemetry: the
+    drift of the class means across the round's merge, the total absorbed
+    stat mass, and class coverage. Host-side (a few (C, d') reductions per
+    ROUND, not per step); JSON-safe for the same JSONL sink/report."""
+    dm = prototypes.means(new) - prototypes.means(prev)
+    return {
+        "proto_drift": float(jnp.sqrt(jnp.sum(jnp.square(dm)))),
+        "proto_mass": float(jnp.sum(new.count)),
+        "classes_seen": int(jnp.sum(new.count > 0)),
+    }
+
+
 # ---------------------------------------------------------------------------
 # state/batch construction (real arrays or ShapeDtypeStructs)
 # ---------------------------------------------------------------------------

@@ -1,0 +1,56 @@
+"""JSONL metrics sink: one line per round record, flushed as written.
+
+Tier 3 of the telemetry layer, the durable half of the reporting surface:
+both engines (and the launch/benchmark paths) hand their per-round record
+dict to a `JsonlWriter`, and `python -m repro.obs.report` renders the file
+back into staleness/occupancy/comm tables. JSONL because runs are streams:
+a crashed or interrupted run keeps every completed round, `tail -f` works,
+and readers never need the whole file in memory.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+
+def _np_default(x):
+    """json.dumps fallback for the numpy scalars/arrays that leak into
+    round records (accuracies, participant ids)."""
+    if isinstance(x, np.ndarray):
+        return x.tolist()
+    if isinstance(x, np.generic):
+        return x.item()
+    raise TypeError(f"not JSON-serializable: {type(x)!r}")
+
+
+class JsonlWriter:
+    def __init__(self, path: str):
+        self.path = path
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        self._f = open(path, "w")
+
+    def write(self, record: dict):
+        self._f.write(json.dumps(record, default=_np_default) + "\n")
+        self._f.flush()
+
+    def close(self):
+        if self._f is not None:
+            self._f.close()
+            self._f = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+
+def read_jsonl(path: str) -> list:
+    """Load a JSONL run back into a list of round records."""
+    with open(path) as f:
+        return [json.loads(line) for line in f if line.strip()]

@@ -1,0 +1,116 @@
+"""Host trace spans around the round phases, Chrome-trace-event output.
+
+Tier 2 of the telemetry layer: a `TraceRecorder` whose `span(name)` context
+manager wraps a round phase (teacher read / update / upload / commit /
+eval) in a `jax.profiler.TraceAnnotation` — so the phases show up inside a
+`jax.profiler.trace` capture — while recording wall-clock begin/end on the
+host and accumulating complete ("ph": "X") Chrome trace events that
+`write()` dumps as JSON loadable in Perfetto (https://ui.perfetto.dev,
+"Open trace file") or chrome://tracing.
+
+Async dispatch caveat: JAX returns before the device finishes, so a bare
+span around a jitted call times the DISPATCH, not the work. For honest
+phase attribution pass `profile=True` and hand each span the outputs to
+block on (`sp.block(out)`): the span then calls `jax.block_until_ready`
+at exit, charging the device time to the phase that ran it. The default
+(profile off) keeps spans free of barriers so tracing never perturbs the
+pipelining it observes — span times then mean "host time until dispatch
+returned", which is still the right lens for dispatch-bound fleets.
+
+In-jit phase labels are separate and always on: the round steps wrap their
+phases in `jax.named_scope`, which costs nothing at runtime (it only names
+HLO metadata) and makes XLA profiles readable without this recorder.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+
+
+class _NullSpan:
+    """No-op span: `null_span` returns this singleton so engines can write
+    `with self._span("phase") as sp: ...; sp.block(out)` unconditionally."""
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+    def block(self, outputs):
+        return outputs
+
+
+NULL_SPAN = _NullSpan()
+
+
+def null_span(name: str, **args):
+    """Span factory with TraceRecorder.span's signature that records
+    nothing — what engines bind when tracing is off."""
+    return NULL_SPAN
+
+
+class _Span:
+    def __init__(self, rec: "TraceRecorder", name: str, args: dict):
+        self._rec, self._name, self._args = rec, name, args
+        self._ann = jax.profiler.TraceAnnotation(name)
+        self._sync = None
+
+    def block(self, outputs):
+        """Register device outputs to block on at span exit (profile mode
+        only). Returns them unchanged so call sites stay expression-shaped."""
+        self._sync = outputs
+        return outputs
+
+    def __enter__(self):
+        self._ann.__enter__()
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        if self._rec.profile and self._sync is not None and exc_type is None:
+            jax.block_until_ready(self._sync)
+        t1 = time.perf_counter()
+        self._ann.__exit__(exc_type, exc, tb)
+        self._rec._add(self._name, self._t0, t1, self._args)
+        return False
+
+
+class TraceRecorder:
+    """Collects phase spans as Chrome trace events.
+
+    path: default destination for `write()` (the engines rewrite it after
+    every round, so the trace is inspectable mid-run and nothing is lost
+    on interrupt). profile: block on each span's registered outputs at
+    exit — see the module docstring for the fidelity/perturbation trade."""
+
+    def __init__(self, path: str = None, profile: bool = False):
+        self.path = path
+        self.profile = profile
+        self.events = []
+        self._origin = time.perf_counter()
+
+    def span(self, name: str, **args):
+        return _Span(self, name, args)
+
+    def _add(self, name: str, t0: float, t1: float, args: dict):
+        ev = {"name": name, "ph": "X", "pid": 1, "tid": 1,
+              "ts": round((t0 - self._origin) * 1e6, 3),
+              "dur": round((t1 - t0) * 1e6, 3)}
+        if args:
+            ev["args"] = args
+        self.events.append(ev)
+
+    def write(self, path: str = None):
+        path = path or self.path
+        if not path:
+            return
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump({"traceEvents": self.events,
+                       "displayTimeUnit": "ms"}, f)

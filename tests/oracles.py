@@ -9,8 +9,16 @@ and prototypes are float-tolerant, because the vmap-batched local updates
 associate float reductions differently than the per-client oracle loop.
 Ledger equality is exact: both engines bill through the same
 `comm.round_floats`, so a single float of drift is a billing bug.
+
+Telemetry (repro.obs) inherits the same split: when BOTH engines run with
+telemetry on, `run_matched` additionally pins every integer leaf of each
+round's `RoundTelemetry` bit-for-bit (they are reductions of the exactly-
+matched ring/event bookkeeping) and holds the float leaves (drift,
+per-bucket losses) to the vmap-association tolerance.
 """
 import numpy as np
+
+from repro.obs import metrics as obs_metrics
 
 # Ring/clock fields every relay state carries and must match bit-for-bit.
 EXACT_FIELDS = ("ptr", "owner", "valid", "stamp", "clock")
@@ -42,14 +50,31 @@ def assert_ledgers_equal(a, b):
     assert a.total_bytes == b.total_bytes
 
 
+def assert_telemetry_match(ts, tv, float_tol=2e-2):
+    """One round's telemetry records (`rec["telemetry"]` dicts) agree:
+    integer leaves exactly, float leaves within `float_tol` (atol+rtol)."""
+    for k in obs_metrics.EXACT_LEAVES:
+        np.testing.assert_array_equal(np.asarray(ts[k]), np.asarray(tv[k]),
+                                      err_msg=k)
+    for k in obs_metrics.FLOAT_LEAVES:
+        np.testing.assert_allclose(np.asarray(ts[k]), np.asarray(tv[k]),
+                                   atol=float_tol, rtol=float_tol,
+                                   err_msg=k)
+
+
 def run_matched(seq, vec, rounds=3, acc_atol=2e-2):
     """Advance a sequential oracle and a vectorized engine in lockstep:
     identical participants and commit lists every round, accuracies within
-    `acc_atol`, then exact ledger and relay-state agreement at the end."""
+    `acc_atol`, per-round telemetry agreement whenever both engines emit
+    it, then exact ledger and relay-state agreement at the end."""
     for _ in range(rounds):
         rs, rv = seq.run_round(), vec.run_round()
         assert rs["participants"] == rv["participants"]
         assert rs["commits"] == rv["commits"]
         np.testing.assert_allclose(rs["accs"], rv["accs"], atol=acc_atol)
+        ts, tv = rs.get("telemetry"), rv.get("telemetry")
+        assert (ts is None) == (tv is None), "telemetry on in one engine"
+        if ts is not None:
+            assert_telemetry_match(ts, tv)
     assert_ledgers_equal(seq.ledger, vec.ledger)
     assert_states_match(seq.server.state, vec.relay_state)

@@ -39,7 +39,7 @@ SPEC_B = client_lib.ClientSpec(
 N = 8
 
 def build(engine, mesh=None, policy=None, schedule=None, clock=None,
-          download_clock=None, hetero=False, n=N):
+          download_clock=None, hetero=False, n=N, telemetry=None):
     x, y = synthetic.class_images(192, seed=0, noise=0.4)
     tx, ty = synthetic.class_images(96, seed=9, noise=0.4)
     parts = partition.uniform_split(x, y, n, seed=1)
@@ -57,7 +57,7 @@ def build(engine, mesh=None, policy=None, schedule=None, clock=None,
     cls = (collab.CollabTrainer if engine == "seq"
            else vec_collab.VectorizedCollabTrainer)
     return cls(specs, params, parts, (tx, ty), ccfg,
-               TrainConfig(batch_size=16), seed=0,
+               TrainConfig(batch_size=16), seed=0, telemetry=telemetry,
                fleet=FleetConfig(mesh=mesh, policy=policy,
                                  participation=schedule, clock=clock,
                                  download_clock=download_clock))
@@ -107,6 +107,18 @@ assert vec.hetero and len(vec.buckets) == 2
 run_matched(build("seq", hetero=True), vec, rounds=2)
 print("HETERO_OK")
 
+# telemetry on the mesh: every RoundTelemetry leaf is declared REPLICATED
+# (obs.metrics.out_spec) and run_matched pins its integer leaves against
+# the oracle bit-for-bit; the extra output must not cost a recompile
+vec = build("vec", mesh=mesh, policy="staleness", clock="lognormal:2",
+            telemetry=True)
+run_matched(build("seq", policy="staleness", clock="lognormal:2",
+                  telemetry=True), vec, rounds=3)
+assert vec._round_step._cache_size() == 1
+t = vec.history[-1]["telemetry"]
+assert "occupancy" in t and "commit_hist" in t
+print("TELEMETRY_OK")
+
 # async x download-lag x mesh in one run: the full composition
 vec = build("vec", mesh=mesh, clock="lognormal:2",
             download_clock="lognormal:2")
@@ -131,6 +143,6 @@ def test_placement_4_devices_matches_oracle():
                          capture_output=True, text=True, timeout=540)
     assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-4000:])
     for marker in ("UNEVEN_GUARD_OK", "SYNC_OK", "ASYNC_OK", "DOWNLOAD_OK",
-                   "STATICK_OK", "HETERO_OK", "COMPOSED_OK",
-                   "MULTIDEVICE_OK"):
+                   "STATICK_OK", "HETERO_OK", "TELEMETRY_OK",
+                   "COMPOSED_OK", "MULTIDEVICE_OK"):
         assert marker in out.stdout, out.stdout
