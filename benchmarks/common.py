@@ -65,8 +65,8 @@ def make_trainer(mode: str, n_clients: int, *, lambda_kd: float = 10.0,
                  engine: str = "vec", batch_size: int = 32,
                  train_data=None, test_data=None, model: str = "cnn",
                  policy=None, participation=None, hetero: str = None,
-                 clock=None, download_clock=None, mesh=None, fleet=None,
-                 telemetry=None):
+                 clock=None, download_clock=None, mesh=None, arrivals=None,
+                 fleet=None, telemetry=None):
     """Build a trainer without running it. engine: "vec" (default — ALL
     benchmark fleets go through the vectorized engine, homogeneous ones as
     one fused round step and mixed ones bucketed; there is no seq
@@ -82,7 +82,11 @@ def make_trainer(mode: str, n_clients: int, *, lambda_kd: float = 10.0,
     download_clock: a repro.sim download-lag spec (e.g. "lognormal:4") —
     clients read stale relay snapshots from the bounded history ring
     (repro.relay.history). mesh: a jax Mesh with a "clients" axis — the
-    placement-aware device path (repro.relay.placement). fleet: pass a
+    placement-aware device path (repro.relay.placement). arrivals: a
+    streaming-population spec (repro.sim.get_arrivals, e.g.
+    "stream:3,2.0,0.2,100000,0") — clients join/leave an unbounded id
+    space over `n_clients` SEATS, and participation is owned by the
+    cohort table. fleet: pass a
     ready-made `repro.types.FleetConfig` instead of the loose
     policy/participation/clock/download_clock/mesh kwargs (mixing both is
     an error, mirroring `resolve_fleet`). telemetry: forwarded to the
@@ -117,7 +121,8 @@ def make_trainer(mode: str, n_clients: int, *, lambda_kd: float = 10.0,
     cls = (vec_collab.VectorizedCollabTrainer if engine == "vec"
            else collab.CollabTrainer)
     loose = {"policy": policy, "participation": participation,
-             "clock": clock, "download_clock": download_clock, "mesh": mesh}
+             "clock": clock, "download_clock": download_clock, "mesh": mesh,
+             "arrivals": arrivals}
     loose = {k: v for k, v in loose.items() if v is not None}
     if fleet is None:
         fleet = FleetConfig(**loose)

@@ -22,6 +22,8 @@ Model choice matters for what you measure:
       [--hetero [--mix mlp:32,mlp:64] [--hetero-n 32]] \
       [--async-sweep [--async-n 32]] \
       [--download-lag [--download-lag-n 32]] \
+      [--population-sweep [--populations 1000,...,1000000] \
+          [--population-seats 8] [--population-shards 2]] \
       [--ci-gate [--out BENCH_ci.json] [--floor benchmarks/ci_floor.json]]
 
 CSV to stdout: model,n_clients,engine,s_per_round,speedup_vs_seq.
@@ -55,6 +57,15 @@ a ring of H_max = D_max + 1 post-merge states. D_max=0 is the round-fresh
 fast path (baseline); larger D_max pays for the in-step snapshot gather +
 ring push, which should leave vec per-round cost ~flat in H_max.
 CSV: model,n_clients,dl_max,engine,s_per_round,speedup_vs_seq.
+
+--population-sweep measures the POPULATION-scale claim (cohort shards +
+streaming arrivals, repro.relay.shards + repro.sim.population): hold the
+active cohort (seats), participation (k) and relay shard count (S) fixed
+while the total client population grows 10^3 -> 10^6. Per-round
+wall-clock and resident state (relay shards + cohort seat table) must
+stay flat — cost follows the cohort, never the id space — and the
+per-shard occupancy/diversity report (repro.obs.shard_summary) surfaces
+hash skew. CSV: model,population,seats,k,shards,s_per_round,state_mb.
 
 --ci-gate is the CI benchmark-regression job (.github/workflows/ci.yml):
 run the tiny committed configs from benchmarks/ci_floor.json (N=8 MLP
@@ -117,7 +128,8 @@ def time_rounds(trainer, rounds: int = 3) -> float:
 def bench(n_clients: int, engine: str, model: str, rounds: int,
           hetero: str = None, per_client: int = None,
           clock: str = None, download_clock: str = None,
-          mesh_devices: int = 0, telemetry=None) -> float:
+          mesh_devices: int = 0, policy: str = None, arrivals: str = None,
+          telemetry=None) -> float:
     pc = per_client or PER_CLIENT
     train = synthetic.class_images(pc * n_clients, seed=0, noise=0.8)
     test = synthetic.class_images(N_TEST, seed=99, noise=0.8)
@@ -129,6 +141,7 @@ def bench(n_clients: int, engine: str, model: str, rounds: int,
                              batch_size=16, train_data=train, test_data=test,
                              hetero=hetero, clock=clock,
                              download_clock=download_clock, mesh=mesh,
+                             policy=policy, arrivals=arrivals,
                              telemetry=telemetry)
     return time_rounds(tr, rounds)
 
@@ -198,12 +211,82 @@ def hetero_sweep(n_clients: int = 32, rounds: int = 3,
     return speedup
 
 
+def _population_trainer(engine: str, population: int, seats: int, k: int,
+                        shards: int, model: str, per_client: int = None,
+                        rate: float = 2.0, p_leave: float = 0.2):
+    """A streaming cohort fleet: `seats` concurrently-resident clients
+    drawn from a `population`-sized external id space, hashed onto
+    `shards` relay shards. Compute, data and relay state are all sized by
+    the SEATS — the population enters only through the id draws."""
+    pc = per_client or PER_CLIENT
+    train = synthetic.class_images(pc * seats, seed=0, noise=0.8)
+    test = synthetic.class_images(N_TEST, seed=99, noise=0.8)
+    return common.make_trainer(
+        "cors", seats, engine=engine, model=model, batch_size=16,
+        train_data=train, test_data=test,
+        policy=f"sharded:flat,{shards}",
+        arrivals=f"stream:{k},{rate},{p_leave},{population},0")
+
+
+def _population_state_mb(tr) -> float:
+    """Resident bytes that COULD scale with the population: the relay
+    state (all shards) plus the cohort seat table."""
+    import jax
+    state = tr.relay_state if hasattr(tr, "relay_state") else tr.server.state
+    nbytes = sum(leaf.nbytes for leaf in jax.tree.leaves(state))
+    return (nbytes + tr._cohort.nbytes()) / 1e6
+
+
+def population_sweep(populations=(10**3, 10**4, 10**5, 10**6),
+                     seats: int = 8, k: int = 2, shards: int = 2,
+                     rounds: int = 12, model: str = "mlp",
+                     tolerance: float = 0.2, reps: int = 2):
+    """The paper's N-independence claim at population scale: hold the
+    active cohort (seats), participation (k) and shard count (S) fixed
+    while the TOTAL population grows 10^3 -> 10^6. Per-round wall-clock
+    and resident state must stay flat (within `tolerance`): cost follows
+    the cohort, never the id space. Also prints the per-shard
+    occupancy/diversity/commit-lag report (repro.obs.shard_summary) for
+    the largest population — the observability surface for shard skew.
+    Each point is the best of `reps` timed windows on the same compiled
+    trainer: percent-level flatness needs sub-noise timings, and ~40ms
+    rounds on a shared 2-core runner drift more than 20% run to run.
+    CSV: model,population,seats,k,shards,s_per_round,state_mb."""
+    from repro import obs
+    print("model,population,seats,k,shards,s_per_round,state_mb")
+    results, last = {}, None
+    for pop in populations:
+        tr = _population_trainer("vec", pop, seats, k, shards, model)
+        t = min(time_rounds(tr, rounds) for _ in range(max(1, reps)))
+        mb = _population_state_mb(tr)
+        results[pop] = {"s_per_round": t, "state_mb": mb}
+        print(f"{model},{pop},{seats},{k},{shards},{t:.4f},{mb:.3f}")
+        last = tr
+    times = [r["s_per_round"] for r in results.values()]
+    spread = max(times) / min(times) - 1.0
+    mbs = [r["state_mb"] for r in results.values()]
+    mem_spread = max(mbs) / min(mbs) - 1.0
+    flat = spread <= tolerance and mem_spread <= tolerance
+    print(f"population-sweep: time spread {spread:.1%}, memory spread "
+          f"{mem_spread:.1%} over N={populations[0]}..{populations[-1]} "
+          f"[{'FLAT' if flat else 'NOT FLAT'}] (tolerance {tolerance:.0%})")
+    shard_rep = obs.shard_summary(last.relay_state)
+    print(f"per-shard occupancy {shard_rep['occupancy']}, owner diversity "
+          f"{shard_rep['owner_diversity']}")
+    return {"results": results, "time_spread": spread,
+            "memory_spread": mem_spread, "flat": flat,
+            "shards": shard_rep}
+
+
 def _measure_entry(cfg) -> tuple:
     """(t_vec, t_seq) for one gate entry config. A "devices" key runs the
     vec side on a forced multi-device mesh (the placement path,
-    repro.relay.placement); the seq oracle is meshless either way."""
+    repro.relay.placement); the seq oracle is meshless either way. A
+    "policy"/"arrivals" pair runs the cohort-sharded streaming fleet
+    (the population entry)."""
     kw = dict(per_client=cfg["per_client"], clock=cfg.get("clock"),
-              download_clock=cfg.get("download_clock"))
+              download_clock=cfg.get("download_clock"),
+              policy=cfg.get("policy"), arrivals=cfg.get("arrivals"))
     t_vec = bench(cfg["n_clients"], "vec", cfg["model"], cfg["rounds"],
                   mesh_devices=int(cfg.get("devices", 0)), **kw)
     t_seq = bench(cfg["n_clients"], "seq", cfg["model"], cfg["rounds"], **kw)
@@ -280,7 +363,8 @@ def ci_gate(out: str = "BENCH_ci.json",
     with open(floor_path) as f:
         floor = json.load(f)
     entries = [("sync", floor)] + [
-        (name, floor[name]) for name in ("async", "download_lag", "mesh")
+        (name, floor[name])
+        for name in ("async", "download_lag", "mesh", "population")
         if name in floor]
     result, failed = {}, []
     for name, entry in entries:
@@ -304,6 +388,35 @@ def ci_gate(out: str = "BENCH_ci.json",
         if not ok:
             failed.append((name, f"vec-over-seq speedup {speedup:.2f}x is "
                                  f"below the committed floor {min_speedup}x"))
+    if "population" in floor:
+        # flatness artifact: a two-point population sweep (10^3 vs 10^6 at
+        # the gate's seats/k/S) written next to `out` for CI upload; a
+        # generous max_spread bounds wall-clock noise while still failing
+        # a real O(population) regression (which shows up as ~10^3x).
+        entry = floor["population"]
+        cfg = entry["config"]
+        sweep = population_sweep(
+            populations=tuple(cfg.get("report_populations",
+                                      (10**3, 10**6))),
+            seats=cfg["n_clients"], k=int(cfg.get("k", 2)),
+            shards=int(cfg.get("shards", 2)),
+            rounds=int(cfg.get("report_rounds", 12)),
+            model=cfg["model"], tolerance=entry.get("max_spread", 0.5))
+        pop_out = os.path.join(os.path.dirname(os.path.abspath(out)),
+                               "BENCH_population.json")
+        with open(pop_out, "w") as f:
+            json.dump(sweep, f, indent=2)
+        result["population"]["sweep"] = pop_out
+        result["population"]["time_spread"] = sweep["time_spread"]
+        result["population"]["flat"] = sweep["flat"]
+        if "max_spread" in entry and not sweep["flat"]:
+            result["population"]["passed"] = False
+            failed.append(
+                ("population", f"per-round cost/memory is not flat in the "
+                               f"population: time spread "
+                               f"{sweep['time_spread']:.1%}, memory spread "
+                               f"{sweep['memory_spread']:.1%} exceed "
+                               f"max_spread {entry['max_spread']:.0%}"))
     if "telemetry" in floor:
         entry = floor["telemetry"]
         base = os.path.dirname(os.path.abspath(out))
@@ -412,6 +525,16 @@ if __name__ == "__main__":
                          "to 5) vec vs seq")
     ap.add_argument("--download-lag-n", type=int, default=32,
                     help="N for the download-lag sweep")
+    ap.add_argument("--population-sweep", action="store_true",
+                    help="hold seats/k/S fixed and grow the total "
+                         "population 10^3 -> 10^6: per-round cost and "
+                         "resident state must stay flat")
+    ap.add_argument("--populations", default="1000,10000,100000,1000000",
+                    help="population sizes for the population sweep")
+    ap.add_argument("--population-seats", type=int, default=8,
+                    help="active-cohort seats for the population sweep")
+    ap.add_argument("--population-shards", type=int, default=2,
+                    help="relay shard count for the population sweep")
     ap.add_argument("--ci-gate", action="store_true",
                     help="run the CI benchmark-regression gate (config + "
                          "floor from --floor; exit 1 below the floor)")
@@ -426,6 +549,11 @@ if __name__ == "__main__":
         sys.exit(gate_probe(args.gate_probe, args.floor))
     if args.ci_gate:
         sys.exit(ci_gate(args.out, args.floor))
+    elif args.population_sweep:
+        population_sweep(
+            tuple(int(p) for p in args.populations.split(",")),
+            seats=args.population_seats, shards=args.population_shards,
+            rounds=args.rounds, model=args.model)
     elif args.download_lag:
         download_lag_sweep(args.download_lag_n, args.rounds, args.model)
     elif args.async_sweep:

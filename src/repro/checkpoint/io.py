@@ -22,29 +22,38 @@ def _paths(tree) -> dict:
     return out
 
 
+def _base(path: str) -> str:
+    """Strip a trailing .npz suffix only — a mid-string `.npz` (e.g. a run
+    dir named `sweep.npz_v2/`) is part of the path, not the extension."""
+    return path[:-len(".npz")] if path.endswith(".npz") else path
+
+
 def save_pytree(path: str, tree: Any, step: int = 0):
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     flat = _paths(tree)
     arrays = {k: np.asarray(v) for k, v in flat.items()}
-    np.savez(path if path.endswith(".npz") else path + ".npz", **arrays)
+    np.savez(_base(path) + ".npz", **arrays)
     meta = {"step": step, "keys": sorted(arrays),
             "shapes": {k: list(a.shape) for k, a in arrays.items()},
             "dtypes": {k: str(a.dtype) for k, a in arrays.items()}}
-    with open(path.replace(".npz", "") + ".json", "w") as f:
+    with open(_base(path) + ".json", "w") as f:
         json.dump(meta, f, indent=1)
 
 
 def load_pytree(path: str, template: Any) -> Any:
     """Restore onto `template` (same structure; leaves may be
     ShapeDtypeStruct or arrays)."""
-    z = np.load(path if path.endswith(".npz") else path + ".npz")
     flat_t = jax.tree_util.tree_flatten_with_path(template)
     leaves = []
-    for kp, leaf in flat_t[0]:
-        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
-                       for k in kp)
-        arr = z[key]
-        want = tuple(leaf.shape)
-        assert tuple(arr.shape) == want, (key, arr.shape, want)
-        leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    with np.load(_base(path) + ".npz") as z:
+        for kp, leaf in flat_t[0]:
+            key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                           for k in kp)
+            arr = z[key]
+            want = tuple(leaf.shape)
+            if tuple(arr.shape) != want:
+                raise ValueError(
+                    f"checkpoint leaf {key!r}: stored shape {arr.shape} "
+                    f"does not match template shape {want}")
+            leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
     return jax.tree_util.tree_unflatten(flat_t[1], leaves)

@@ -143,8 +143,46 @@ class CollabTrainer:
         self.clock = sim.get_clock(fleet.clock, seed=seed)
         self._queue = events.HostEventQueue()
         self.policy = relay_lib.get_policy(fleet.policy)
-        self.schedule = relay_lib.get_schedule(fleet.participation,
-                                               seed=seed, clock=self.clock)
+        # Streaming population (repro.sim.population): the cohort table
+        # OWNS participation, ring rows are tagged with EXTERNAL ids, and
+        # the table's LRU evictions hit the relay at round start. The
+        # compositions below are rejected, not silently wrong: the async
+        # pending buffer and the history ring key state by a STATIC id
+        # space (upload position / snapshot owner), which seat turnover
+        # invalidates — re-filed as ROADMAP follow-ons.
+        self.arrivals = sim.get_arrivals(fleet.arrivals)
+        self._streaming = self.arrivals is not None
+        if self._streaming:
+            if fleet.participation is not None:
+                raise ValueError(
+                    "streaming arrivals own participation (the cohort "
+                    "table picks k active seats per round); leave "
+                    "FleetConfig.participation unset")
+            if self.clock is not None and self.clock.d_max > 0:
+                raise ValueError(
+                    "streaming arrivals do not compose with an async "
+                    "upload clock yet: the pending buffer is indexed by "
+                    "upload position, which seat turnover reuses")
+            if fleet.download_clock is not None:
+                raise ValueError(
+                    "streaming arrivals do not compose with download lag "
+                    "yet: history snapshots hold evicted owners' rows")
+            if ccfg.mode not in ("cors", "fd"):
+                raise ValueError(
+                    "streaming arrivals need a relay mode (cors | fd); "
+                    f"mode={ccfg.mode!r} has no server to stream through")
+            if len(buckets) > 1:
+                raise ValueError(
+                    "streaming arrivals currently require a homogeneous "
+                    "fleet (seats are interchangeable); got "
+                    f"{len(buckets)} client buckets")
+            self._cohort = self.arrivals.table(len(specs))
+            self.schedule = None
+        else:
+            self._cohort = None
+            self.schedule = relay_lib.get_schedule(fleet.participation,
+                                                   seed=seed,
+                                                   clock=self.clock)
         self.server = relay_lib.RelayServer(ccfg, ccfg.d_feature, seed,
                                             n_clients=len(specs),
                                             policy=self.policy)
@@ -188,8 +226,27 @@ class CollabTrainer:
         # never use theirs.
         r = len(self.history)
         self.key, relay_ks, upd_ks, upl_ks = round_keys(self.key, N)
-        mask = np.asarray(self.schedule.mask(r, N), bool)
+        if self._streaming:
+            # Cohort table view: participation mask over SEATS, external
+            # ids per seat, and the owners LRU-evicted at admission time —
+            # their ring slots are invalidated BEFORE any read this round.
+            view = self._cohort.round(r)
+            mask = view.mask.copy()
+            ext_ids = view.seat_ids
+            if view.evicted.size:
+                with self._span("evict", round=r) as sp:
+                    self.server.state = self.policy.evict_owners(
+                        self.server.state,
+                        jnp.asarray(view.evicted, jnp.int32))
+                    sp.block(self.server.state)
+        else:
+            mask = np.asarray(self.schedule.mask(r, N), bool)
+            ext_ids = None
         present = np.nonzero(mask)[0]
+        # Ring owner tags use the EXTERNAL id under streaming arrivals;
+        # seat index i doubles as the id for a static fleet.
+        owner_of = ((lambda i: int(ext_ids[i])) if self._streaming
+                    else (lambda i: int(i)))
         delays = (self.clock.delays(r, N) if self.clock is not None
                   else np.zeros((N,), np.int64))
 
@@ -203,7 +260,7 @@ class CollabTrainer:
         with self._span("teacher_read", round=r) as sp:
             for i in present:
                 teachers[i] = (self.server.relay(
-                    i, max(1, ccfg.m_down), relay_ks[i],
+                    owner_of(i), max(1, ccfg.m_down), relay_ks[i],
                     state=self._snapshot(int(dl[i])))
                     if mode in ("cors", "fd")
                     else client_lib.empty_teacher(ccfg))
@@ -231,7 +288,12 @@ class CollabTrainer:
         # untouched (no merge, no clock tick).
         commits: List[Tuple[int, int]] = [(r, int(i)) for i in present]
         if mode in ("cors", "fd"):
-            birth_clock = int(self.server.state.clock)
+            # Birth stamps are policy-resolved: the flat clock for single
+            # relays (identical to the old int(state.clock) broadcast), the
+            # OWNER's shard clock for the sharded relay.
+            order_owners = [owner_of(i) for i in self._upload_order]
+            birth_stamps = self.policy.host_stamps(self.server.state,
+                                                   order_owners)
             with self._span("upload", round=r):
                 for pos, i in enumerate(self._upload_order):
                     if not mask[i]:
@@ -240,13 +302,17 @@ class CollabTrainer:
                     payload = self._upload_fn(c.spec)(c.params, c.data_x,
                                                       c.data_y, upl_ks[i])
                     self._queue.push(birth=r, pos=pos, client_id=i,
-                                     stamp=birth_clock, payload=payload,
+                                     stamp=int(birth_stamps[pos]),
+                                     payload=payload,
                                      delay=int(delays[i]))
             with self._span("commit", round=r) as sp:
                 due = self._queue.pop_due(r)
                 self.server.begin_round()
                 for birth, pos, cid, stamp, payload, _ in due:
-                    self.server.upload(cid, payload, stamp=stamp)
+                    # Streaming is sync-only (guarded above), so every due
+                    # event was pushed THIS round and the seat -> external
+                    # id map is the current view's.
+                    self.server.upload(owner_of(cid), payload, stamp=stamp)
                 if due:
                     self.server.end_round()
                 sp.block(self.server.state)

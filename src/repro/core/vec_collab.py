@@ -198,27 +198,40 @@ def make_client_upload_phase(spec: client_lib.ClientSpec,
     return uploads_of
 
 
-def make_upload_phase(spec: client_lib.ClientSpec, ccfg: CollabConfig):
+def make_upload_phase(spec: client_lib.ClientSpec, ccfg: CollabConfig,
+                      policy: relay_lib.RelayPolicy = None):
     """Phase 3a (uplink, compute side): the per-client pieces reduced into
     relay-ready synchronous-append form. Returns `uploads_of(params,
     data_x, data_y, upl_ks, ids, mask) -> (proto, logit|None, obs_rows,
     valid_rows, owner_rows, row_mask)` where absent clients' prototype
     sums are zero-weighted and their observation rows masked out (dropped
-    by the relay append WITHOUT consuming ring slots)."""
+    by the relay append WITHOUT consuming ring slots).
+
+    A `policy` defining `reduce_uploads` (e.g. the sharded relay) owns the
+    reduction instead: the same mask weights and per-client sums are
+    segmented by owner rather than summed over the client axis. Policies
+    without the hook (and `policy=None`) keep the traced program
+    unchanged."""
     mode = ccfg.mode
     per_client = make_client_upload_phase(spec, ccfg)
+    reduce = policy.reduce_uploads if policy is not None else None
 
     def uploads_of(p_s, dx, dy, upl_ks, ids_s, sub_mask):
         wf = sub_mask.astype(jnp.float32)
         u = per_client(p_s, dx, dy, upl_ks, ids_s)
-        proto = prototypes.ProtoState(
-            jnp.sum(u["psum"] * wf[:, None, None], axis=0),
-            jnp.sum(u["pcnt"] * wf[:, None], axis=0))
+        if reduce is None:
+            proto = prototypes.ProtoState(
+                jnp.sum(u["psum"] * wf[:, None, None], axis=0),
+                jnp.sum(u["pcnt"] * wf[:, None], axis=0))
+        else:
+            proto = reduce(u["psum"], u["pcnt"], wf, u["owner"])
         logit = None
         if mode == "fd":
-            logit = prototypes.ProtoState(
+            logit = (prototypes.ProtoState(
                 jnp.sum(u["lsum"] * wf[:, None, None], axis=0),
                 jnp.sum(u["lcnt"] * wf[:, None], axis=0))
+                if reduce is None
+                else reduce(u["lsum"], u["lcnt"], wf, u["owner"]))
         m_real = u["obs"].shape[1]           # 0 when m_up == 0
         obs_rows = u["obs"].reshape(-1, *u["obs"].shape[2:])
         valid_rows = jnp.repeat(u["valid"], m_real, axis=0)
@@ -423,7 +436,7 @@ def make_bucket_update_step(spec: client_lib.ClientSpec, ccfg: CollabConfig,
     mode = ccfg.mode
     local_update = client_lib.make_local_update_fn(spec, ccfg, tcfg)
     teachers = make_teacher_phase(policy, ccfg, lagged=lagged)
-    uploads_of = make_upload_phase(spec, ccfg)
+    uploads_of = make_upload_phase(spec, ccfg, policy)
     uploads_per_client = make_client_upload_phase(spec, ccfg)
 
     def step(params, opt, rstate, batches, data_x, data_y, ids,
@@ -535,8 +548,39 @@ class VectorizedCollabTrainer:
         self.mesh = mesh = fleet.mesh
         self.policy = relay_lib.get_policy(fleet.policy)
         self.clock = sim.get_clock(fleet.clock, seed=seed)
-        self.schedule = relay_lib.get_schedule(fleet.participation,
-                                               seed=seed, clock=self.clock)
+        # Streaming population (repro.sim.population): the cohort table
+        # OWNS participation and seat indices carry EXTERNAL client ids.
+        # Composition guards mirror the sequential oracle (core/collab.py)
+        # exactly — rejected, not silently wrong.
+        self.arrivals = sim.get_arrivals(fleet.arrivals)
+        self._streaming = self.arrivals is not None
+        if self._streaming:
+            if fleet.participation is not None:
+                raise ValueError(
+                    "streaming arrivals own participation (the cohort "
+                    "table picks k active seats per round); leave "
+                    "FleetConfig.participation unset")
+            if self.clock is not None and self.clock.d_max > 0:
+                raise ValueError(
+                    "streaming arrivals do not compose with an async "
+                    "upload clock yet: the pending buffer is indexed by "
+                    "upload position, which seat turnover reuses")
+            if fleet.download_clock is not None:
+                raise ValueError(
+                    "streaming arrivals do not compose with download lag "
+                    "yet: history snapshots hold evicted owners' rows")
+            if ccfg.mode not in ("cors", "fd"):
+                raise ValueError(
+                    "streaming arrivals need a relay mode (cors | fd); "
+                    f"mode={ccfg.mode!r} has no server to stream through")
+            self._cohort = self.arrivals.table(N)
+            self.schedule = None
+            self._evict = jax.jit(self.policy.evict_owners)
+        else:
+            self._cohort = None
+            self.schedule = relay_lib.get_schedule(fleet.participation,
+                                                   seed=seed,
+                                                   clock=self.clock)
         # Asynchrony (bounded-delay uploads, relay/events.py) only touches
         # relay commits, so only relay modes run the async path; a D_max=0
         # clock IS the synchronous fleet and keeps today's fast paths
@@ -557,6 +601,11 @@ class VectorizedCollabTrainer:
         buckets = client_lib.bucketize(specs, params_list)
         self.bucket_ids: List[List[int]] = [ids for _, ids in buckets]
         self.hetero = len(buckets) > 1
+        if self._streaming and self.hetero:
+            raise ValueError(
+                "streaming arrivals currently require a homogeneous "
+                "fleet (seats are interchangeable); got "
+                f"{len(buckets)} client buckets")
         if self.hetero and ccfg.mode == "fedavg":
             raise ValueError(
                 "FedAvg averages whole weight vectors, which needs one "
@@ -642,7 +691,10 @@ class VectorizedCollabTrainer:
         # commit set — the async step runs full-width). On a mesh the
         # compacted (k, ...) block is client-sharded like the full stack;
         # GSPMD pads non-divisible k.
-        fixed_k = self.schedule.fixed_k
+        # Streaming cohorts run full-width: the seat-id vector is traced
+        # and participation varies with the active-seat count.
+        fixed_k = (self.schedule.fixed_k if self.schedule is not None
+                   else None)
         self._k_active = (fixed_k if (fixed_k is not None
                                       and not self._async)
                           else N)
@@ -742,7 +794,7 @@ class VectorizedCollabTrainer:
         telem = self._telem        # static: off -> the trace is unchanged
         local_update = client_lib.make_local_update_fn(spec, ccfg, tcfg)
         teachers = make_teacher_phase(policy, ccfg, lagged=lagged)
-        uploads_of = make_upload_phase(spec, ccfg)
+        uploads_of = make_upload_phase(spec, ccfg, policy)
         # Gather/scatter the participant block ONLY when it is a strict
         # subset: with k == N the idx is a runtime arange XLA cannot elide,
         # and the full-size gather + scatter-back of params/opt/batches
@@ -911,8 +963,23 @@ class VectorizedCollabTrainer:
         # consume theirs), so seq and vec stay equivalence-testable under
         # every schedule.
         self.key, relay_ks, upd_ks, upl_ks = collab.round_keys(self.key, N)
-        ids = jnp.arange(N, dtype=jnp.int32)
-        mask_np = np.asarray(self.schedule.mask(r, N), bool)
+        if self._streaming:
+            # Cohort view: mask over SEATS, external ids per seat (the
+            # traced `ids` arg — seat turnover never retraces). LRU-evicted
+            # owners' ring slots are invalidated BEFORE any read this
+            # round, same order as the sequential oracle.
+            view = self._cohort.round(r)
+            mask_np = view.mask.copy()
+            ids = jnp.asarray(view.seat_ids, jnp.int32)
+            if view.evicted.size:
+                with self._span("evict", round=r) as sp:
+                    self.relay_state = self._evict(
+                        self.relay_state,
+                        jnp.asarray(view.evicted, jnp.int32))
+                    sp.block(self.relay_state)
+        else:
+            mask_np = np.asarray(self.schedule.mask(r, N), bool)
+            ids = jnp.arange(N, dtype=jnp.int32)
         present = np.nonzero(mask_np)[0]
         delays_np = (self.clock.delays(r, N) if self.clock is not None
                      else np.zeros((N,), np.int64))

@@ -28,7 +28,7 @@ from repro.obs import metrics, sink, trace  # noqa: F401  (re-exported tiers)
 # `python -m repro.obs.report` CLI, and importing it from the package
 # would make runpy warn about the double module identity.
 from repro.obs.metrics import (  # noqa: F401
-    STALE_BINS, RoundTelemetry, round_telemetry, to_record)
+    STALE_BINS, RoundTelemetry, round_telemetry, shard_summary, to_record)
 from repro.obs.sink import JsonlWriter, read_jsonl  # noqa: F401
 from repro.obs.trace import NULL_SPAN, TraceRecorder, null_span  # noqa: F401
 

@@ -84,8 +84,8 @@ def out_spec(telem: RoundTelemetry):
     return placement.like(telem, placement.REPLICATED)
 
 
-def relay_summary(state, n_clients: int):
-    """(occupancy, fill, owner_diversity, stale_hist) of one relay state.
+def _single_summary(state, n_clients: int):
+    """(occupancy, fill, owner_diversity, stale_hist) of ONE relay state.
 
     Layout-generic across the policy states: flat/staleness rings carry
     `valid (cap, C)` / `owner (cap,)`, the per-class layout carries
@@ -99,15 +99,51 @@ def relay_summary(state, n_clients: int):
     live = owner != EMPTY_OWNER
     li = live.astype(jnp.int32)
     occupancy = jnp.sum(li)
-    # distinct real owners: scatter-add live slots onto a static (N,)
-    # count vector, count the nonzero entries (seeds' owner=-1 excluded)
-    real = (live & (owner >= 0)).astype(jnp.int32)
-    counts = jnp.zeros((n_clients,), jnp.int32).at[
-        jnp.clip(owner, 0, n_clients - 1)].add(real)
-    owner_diversity = jnp.sum((counts > 0).astype(jnp.int32))
+    # distinct real owners (seeds' owner=-1 excluded): sort-based exact
+    # count — dead slots sort to a sentinel, a live owner counts where it
+    # differs from its sorted predecessor. Unlike a scatter onto an (N,)
+    # count vector this is id-space independent, which streaming arrivals
+    # need: external ids are unbounded while seats stay few.
+    sentinel = jnp.iinfo(jnp.int32).max
+    key = jnp.sort(jnp.where(live & (owner >= 0), owner, sentinel))
+    isreal = key != sentinel
+    distinct = isreal & jnp.concatenate(
+        [jnp.ones((1,), bool), key[1:] != key[:-1]])
+    owner_diversity = jnp.sum(distinct.astype(jnp.int32))
     age = jnp.clip(state.clock - stamp, 0, STALE_BINS - 1)
     stale_hist = jnp.zeros((STALE_BINS,), jnp.int32).at[age].add(li)
     return occupancy, fill, owner_diversity, stale_hist
+
+
+def relay_summary(state, n_clients: int):
+    """(occupancy, fill, owner_diversity, stale_hist) of a relay state.
+
+    Sharded relay states (relay/shards.py — every inner leaf stacked on a
+    leading (S,) axis) summarize per shard and reduce: occupancy/fill/
+    stale_hist sum, and because a client hashes to exactly ONE shard,
+    distinct owners across shards is the sum of per-shard counts too."""
+    if hasattr(state, "shards"):
+        occ, fill, div, hist = jax.vmap(
+            lambda s: _single_summary(s, n_clients))(state.shards)
+        return (jnp.sum(occ), jnp.sum(fill, axis=0), jnp.sum(div),
+                jnp.sum(hist, axis=0))
+    return _single_summary(state, n_clients)
+
+
+def shard_summary(state, n_clients: int = 0) -> dict:
+    """Host-side PER-SHARD summary — the population sweep's report surface
+    (occupancy, owner diversity and the age histogram per relay shard).
+    Single-relay states report themselves as one shard."""
+    if hasattr(state, "shards"):
+        occ, fill, div, hist = jax.vmap(
+            lambda s: _single_summary(s, n_clients))(state.shards)
+    else:
+        o, f, d, h = _single_summary(state, n_clients)
+        occ, fill, div, hist = o[None], f[None], d[None], h[None]
+    occ, div, hist = jax.device_get((occ, div, hist))
+    return {"occupancy": np.asarray(occ).tolist(),
+            "owner_diversity": np.asarray(div).tolist(),
+            "stale_hist": np.asarray(hist).tolist()}
 
 
 def round_telemetry(prev_state, new_state, n_clients: int, *, mask,

@@ -1,7 +1,8 @@
 """Relay-policy + participation subsystem (see relay/README.md).
 
 Public surface:
-  - policies: FlatRelay | PerClassRelay | StalenessRelay, via `get_policy`
+  - policies: FlatRelay | PerClassRelay | StalenessRelay | ShardedRelay
+    (cohort shards over any of the former), via `get_policy`
   - schedules: FullParticipation | UniformK | Cyclic | BernoulliP |
     AdaptiveParticipation, via `get_schedule`
   - `relay.events`: the asynchronous event-ordered commit log (pending
@@ -27,17 +28,22 @@ from repro.relay.participation import (AdaptiveParticipation,  # noqa: F401
 from repro.relay import placement  # noqa: F401
 from repro.relay.per_class import PerClassRelay, PerClassRelayState  # noqa: F401
 from repro.relay.server import RelayServer  # noqa: F401
+from repro.relay.shards import (ShardedRelay,  # noqa: F401
+                                ShardedRelayState, shard_of, shard_view)
 from repro.relay.staleness import (StalenessRelay,  # noqa: F401
                                    StalenessRelayState, staleness_weights)
 from repro.specs import parse_spec
 
 POLICIES = {"flat": FlatRelay, "per_class": PerClassRelay,
-            "staleness": StalenessRelay}
+            "staleness": StalenessRelay, "sharded": ShardedRelay}
 
 
 def get_policy(spec: Union[str, RelayPolicy, None], **kwargs) -> RelayPolicy:
     """Resolve a policy name ("flat" | "per_class" | "staleness", optionally
-    "staleness:<lam>") or instance; None means the flat (seed) policy."""
+    "staleness:<lam>") or instance; None means the flat (seed) policy.
+    "sharded:<inner>,<S>[,<gossip_every>]" wraps an inner policy name in S
+    cohort shards (inner policies needing their own args are passed as
+    instances: ShardedRelay(inner=StalenessRelay(lam=...), shards=S))."""
     if spec is None:
         return FlatRelay()
     if isinstance(spec, RelayPolicy):
@@ -45,4 +51,11 @@ def get_policy(spec: Union[str, RelayPolicy, None], **kwargs) -> RelayPolicy:
     name, args = parse_spec(spec, "relay policy", POLICIES)
     if name == "staleness" and args:
         kwargs.setdefault("lam", float(args[0]))
+    if name == "sharded":
+        if args:
+            kwargs.setdefault("inner", get_policy(args[0]))
+        if len(args) > 1:
+            kwargs.setdefault("shards", int(args[1]))
+        if len(args) > 2:
+            kwargs.setdefault("gossip_every", int(args[2]))
     return POLICIES[name](**kwargs)

@@ -28,6 +28,29 @@ fixed-shape arrays (jit/vmap/shard_map-compatible, no data-dependent Python):
       End-of-round aggregation of the clients' per-class sums into global
       prototypes (the server's only computation), plus any per-round state
       bookkeeping (e.g. staleness age increments).
+  evict_owners(state, owners) -> state
+      Population bookkeeping: invalidate every live slot whose owner is in
+      `owners` ((E,) int32; pad with EMPTY_OWNER, which never matches).
+      Slots become EMPTY (owner=EMPTY_OWNER, valid=False, stamp/age reset)
+      but the write pointer and clock are untouched — eviction frees
+      retention space without rewinding history or billing. Engines call it
+      at round START for clients the cohort table (repro.sim.population)
+      LRU-evicted, in BOTH engines, so it is part of the oracle contract.
+
+Two optional hooks support policies whose state is not a single ring:
+
+  reduce_uploads(psum, pcnt, w, owners) -> proto pytree   [default: None]
+      When not None, engines route the per-upload prototype contributions
+      (leading axis = uploads; `w` (k,) f32 commit weights, `owners` (k,)
+      int32) through the policy instead of the builtin mask-weighted sum,
+      and pass the result as `merge_round`'s `proto`/`logit`. The sharded
+      relay uses this to keep per-shard partial sums. None (the default)
+      keeps the engines' existing reduction byte-identical.
+  stamp_now(state, owners) -> (k,) int32
+      Birth stamps for uploads born "now" by the given owners. Default:
+      broadcast of the scalar state clock (same program as before the hook
+      existed); the sharded relay stamps each owner with its shard clock.
+      `host_stamps` is the host-side mirror the sequential oracle uses.
 
 Ordering: engines call `append` (phase 3 uploads, event order — commit
 order; client-id/bucket order for synchronous fleets) and THEN
@@ -67,6 +90,7 @@ from __future__ import annotations
 from typing import Dict, Optional
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import prototypes
 from repro.relay import placement
@@ -125,6 +149,27 @@ class RelayPolicy:
     def merge_round(self, state, proto, logit=None):
         raise NotImplementedError
 
+    def evict_owners(self, state, owners):
+        raise NotImplementedError
+
+    # -- optional engine hooks (see module docstring) ----------------------
+    # When None, engines keep their builtin mask-weighted proto reduction
+    # (byte-identical programs for every pre-existing policy).
+    reduce_uploads = None
+
+    def stamp_now(self, state, owners):
+        """Birth stamps for uploads born at the current clock. Default:
+        broadcast of the scalar clock (identical ops to the pre-hook
+        inline code)."""
+        return jnp.broadcast_to(state.clock.astype(jnp.int32),
+                                owners.shape)
+
+    def host_stamps(self, state, owners) -> np.ndarray:
+        """Host-side mirror of `stamp_now` for the sequential oracle:
+        numpy int stamps for uploads born now by `owners` (host ints)."""
+        return np.full((len(owners),), int(np.asarray(state.clock)),
+                       dtype=np.int64)
+
     # -- placement contract (relay/placement.py) ---------------------------
     def out_spec(self, state):
         """Placement pytree of `state` (same structure, one
@@ -159,3 +204,11 @@ def ring_indices(ptr, k: int, cap: int, row_mask=None):
     offs = jnp.cumsum(w) - 1                       # slot offset per real row
     idx = jnp.where(row_mask, (ptr + offs) % cap, cap).astype(jnp.int32)
     return idx, ((ptr + jnp.sum(w)) % cap).astype(jnp.int32)
+
+
+def owner_hits(owner, owners):
+    """Slots whose owner appears in `owners` ((E,) int32). Broadcasts over
+    any owner-array shape. EMPTY_OWNER padding in `owners` only re-matches
+    already-empty slots, so eviction with padded vectors is idempotent;
+    SEED_OWNER never appears in an eviction list."""
+    return jnp.any(owner[..., None] == owners, axis=-1)

@@ -139,7 +139,7 @@ def commit_and_park(policy, rstate, pending: PendingState, fresh: Dict,
     m = fresh["obs"].shape[1]
     D = pending.d_max
     fresh_commit = mask & (delays == 0)
-    fresh_stamp = jnp.broadcast_to(rstate.clock.astype(jnp.int32), (N,))
+    fresh_stamp = policy.stamp_now(rstate, fresh["owner"])
 
     # -- gather the commit set in event order ------------------------------
     rep = lambda a: jnp.repeat(a, m, axis=0)          # upload -> m obs rows
@@ -158,15 +158,8 @@ def commit_and_park(policy, rstate, pending: PendingState, fresh: Dict,
             rep(fresh["owner"])])
         row_mask = jnp.concatenate([rep(flat(due)), rep(fresh_commit)])
         stamp_rows = jnp.concatenate([rep(flat(po.stamp)), rep(fresh_stamp)])
-        # fresh reduction mirrors the synchronous upload phase EXACTLY
-        # (mask-weighted sum over the client axis), so a round whose
-        # pending contribution is zero is bit-identical to the sync merge
         wf = fresh_commit.astype(jnp.float32)
         wdue = due.astype(jnp.float32)
-        psum = (jnp.sum(fresh["psum"] * wf[:, None, None], axis=0)
-                + jnp.einsum("dn,dn...->...", wdue, po.psum))
-        pcnt = (jnp.sum(fresh["pcnt"] * wf[:, None], axis=0)
-                + jnp.einsum("dn,dn...->...", wdue, po.pcnt))
         any_commit = jnp.any(due) | jnp.any(fresh_commit)
     else:
         obs_rows = fresh["obs"].reshape(N * m, *fresh["obs"].shape[2:])
@@ -175,20 +168,40 @@ def commit_and_park(policy, rstate, pending: PendingState, fresh: Dict,
         row_mask = rep(fresh_commit)
         stamp_rows = rep(fresh_stamp)
         wf = fresh_commit.astype(jnp.float32)
-        psum = jnp.sum(fresh["psum"] * wf[:, None, None], axis=0)
-        pcnt = jnp.sum(fresh["pcnt"] * wf[:, None], axis=0)
         any_commit = jnp.any(fresh_commit)
 
     from repro.core import prototypes
-    proto = prototypes.ProtoState(psum, pcnt)
+
+    def _reduce(fsum, fcnt, parked_sum, parked_cnt):
+        """Reduce this round's committing prototype sums to the policy's
+        merge input. Default: mask-weighted sum over upload positions plus
+        the due parked sums — EXACTLY the synchronous upload phase, so a
+        round with zero pending contribution is bit-identical to the sync
+        merge. Policies with `reduce_uploads` (e.g. cohort shards) segment
+        the same per-position contributions by owner instead; owners are
+        static per position (arrivals x async is rejected at construction),
+        so a position's parked sums belong to the same owner as its fresh."""
+        if policy.reduce_uploads is None:
+            s = jnp.sum(fsum * wf[:, None, None], axis=0)
+            c = jnp.sum(fcnt * wf[:, None], axis=0)
+            if D > 0:
+                s = s + jnp.einsum("dn,dn...->...", wdue, parked_sum)
+                c = c + jnp.einsum("dn,dn...->...", wdue, parked_cnt)
+            return prototypes.ProtoState(s, c)
+        s = fsum * wf[:, None, None]
+        c = fcnt * wf[:, None]
+        if D > 0:
+            s = s + jnp.einsum("dn,dn...->n...", wdue, parked_sum)
+            c = c + jnp.einsum("dn,dn...->n...", wdue, parked_cnt)
+        return policy.reduce_uploads(s, c, jnp.ones((N,), jnp.float32),
+                                     fresh["owner"])
+
+    proto = _reduce(fresh["psum"], fresh["pcnt"],
+                    po.psum if D > 0 else None, po.pcnt if D > 0 else None)
     logit = None
     if fresh.get("lsum") is not None:
-        lsum = jnp.sum(fresh["lsum"] * wf[:, None, None], axis=0)
-        lcnt = jnp.sum(fresh["lcnt"] * wf[:, None], axis=0)
-        if D > 0:
-            lsum = lsum + jnp.einsum("dn,dn...->...", wdue, po.lsum)
-            lcnt = lcnt + jnp.einsum("dn,dn...->...", wdue, po.lcnt)
-        logit = prototypes.ProtoState(lsum, lcnt)
+        logit = _reduce(fresh["lsum"], fresh["lcnt"],
+                        po.lsum if D > 0 else None, po.lcnt if D > 0 else None)
 
     # THE cross-device exchange: the commit payload (due rows + merged
     # sums) becomes replicated here; everything above is element-wise along

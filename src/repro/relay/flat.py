@@ -1,7 +1,7 @@
 """Flat ring relay — one global ring, uniform with-replacement sampling.
 
-This is the seed implementation moved verbatim from `core/server.py` (which
-now re-exports it): a single (cap, C, d') observation ring with per-slot
+This is the seed implementation, moved verbatim from the retired
+`core/server.py`: a single (cap, C, d') observation ring with per-slot
 validity/owner and uniform sampling over other clients' slots. It is the
 bit-compatibility anchor — `FlatRelay` must evolve byte-identical state to
 the pre-subsystem `RelayState`, and the seq/vec equivalence tests in
@@ -116,6 +116,19 @@ def merge_round(state: RelayState, proto: prototypes.ProtoState,
     return base.merge_protos(state, proto, logit)
 
 
+def evict_slots(state, owners) -> RelayState:
+    """Invalidate live slots owned by evicted clients (flat ring layout,
+    shared by flat and staleness states). Ptr/clock/billing untouched."""
+    hit = base.owner_hits(state.owner, owners)
+    state = state._replace(
+        owner=jnp.where(hit, EMPTY_OWNER, state.owner),
+        valid=jnp.where(hit[:, None], False, state.valid),
+        stamp=jnp.where(hit, 0, state.stamp))
+    if hasattr(state, "age"):
+        state = state._replace(age=jnp.where(hit, 0, state.age))
+    return state
+
+
 # -- downlink (pure) -------------------------------------------------------
 def sample_teacher(state: RelayState, client_id, m_down: int, key) -> Dict:
     """Observations of OTHER users, chosen at random (paper §4: 'downloads
@@ -163,6 +176,9 @@ class FlatRelay(base.RelayPolicy):
 
     def merge_round(self, state, proto, logit=None):
         return merge_round(state, proto, logit)
+
+    def evict_owners(self, state, owners):
+        return evict_slots(state, owners)
 
     def out_spec(self, state):
         """Placement declaration (relay/placement.py): the flat ring IS the

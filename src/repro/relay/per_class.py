@@ -164,6 +164,14 @@ class PerClassRelay(base.RelayPolicy):
                                             state.clock - state.stamp,
                                             state.age))
 
+    def evict_owners(self, state, owners):
+        hit = base.owner_hits(state.owner, owners)   # (C, cap_c)
+        return state._replace(
+            owner=jnp.where(hit, EMPTY_OWNER, state.owner),
+            valid=jnp.where(hit, False, state.valid),
+            age=jnp.where(hit, 0, state.age),
+            stamp=jnp.where(hit, 0, state.stamp))
+
     def out_spec(self, state):
         """Placement declaration (relay/placement.py): the leading axis of
         every ring leaf is the CLASS axis (C independent rings shared by

@@ -39,11 +39,13 @@ class RelayServer:
                                             n_clients)
         self.round_states: List[prototypes.ProtoState] = []
         self.round_logit_states: List[prototypes.ProtoState] = []
+        self.round_owners: List[int] = []
 
     # -- uplink ------------------------------------------------------------
     def begin_round(self):
         self.round_states = []
         self.round_logit_states = []
+        self.round_owners = []
 
     def upload(self, client_id: int, payload: Dict, stamp=None):
         """Append one client's upload. `stamp` (int or None) is the birth
@@ -52,6 +54,7 @@ class RelayServer:
         event log (relay/events.py) passes the true birth clock so delayed
         commits arrive correctly pre-aged."""
         self.round_states.append(payload["proto"])
+        self.round_owners.append(int(client_id))
         if "logit_proto" in payload:
             self.round_logit_states.append(payload["logit_proto"])
         obs = payload["obs"]                                  # (M_up, C, d')
@@ -64,11 +67,26 @@ class RelayServer:
                         else jnp.full((m,), stamp, jnp.int32)))
 
     def end_round(self):
-        if self.round_states:
+        if not self.round_states:
+            return
+        if self.policy.reduce_uploads is None:
             merged = prototypes.merge(*self.round_states)
             logit = (prototypes.merge(*self.round_logit_states)
                      if self.round_logit_states else None)
-            self.state = self.policy.merge_round(self.state, merged, logit)
+        else:
+            # Policy-owned reduction (e.g. per-shard partial sums): stack
+            # the per-upload contributions and let the policy segment them
+            # by owner. Weights are 1 — every staged upload commits.
+            owners = jnp.asarray(self.round_owners, jnp.int32)
+            w = jnp.ones((len(self.round_owners),), jnp.float32)
+            merged = self.policy.reduce_uploads(
+                jnp.stack([p.sum for p in self.round_states]),
+                jnp.stack([p.count for p in self.round_states]), w, owners)
+            logit = (self.policy.reduce_uploads(
+                jnp.stack([p.sum for p in self.round_logit_states]),
+                jnp.stack([p.count for p in self.round_logit_states]),
+                w, owners) if self.round_logit_states else None)
+        self.state = self.policy.merge_round(self.state, merged, logit)
 
     # -- downlink ----------------------------------------------------------
     def relay(self, client_id: int, m_down: int, key, state=None) -> Dict:

@@ -1,0 +1,276 @@
+"""Cohort-sharded relay — S independent relays + periodic prototype gossip.
+
+The paper's scalability claim is that relay cost depends on the buffer
+capacity `cap` and the participants-per-round `k`, never on the population
+N. One global ring breaks that at population scale: every append scans one
+write pointer, every sampler contends for one pool, and capacity has to
+grow with the population to keep owner diversity. The fix is the standard
+serving-infra move: **shard by client**. Each client hashes to one of S
+relay shards (`shard_of` — a pure integer mix, so a client's shard never
+changes while it is active, or ever); each shard is a COMPLETE inner
+`RelayPolicy` state, so flat / per_class / staleness all work unchanged.
+
+Layout. `ShardedRelayState.shards` is the inner policy's state with every
+leaf stacked along a leading (S,) axis — exactly the snapshot contract
+relay/base.py already guarantees (fixed-shape NamedTuple pytrees stack
+along leading axes; that is what the download-lag history ring relies on),
+which is why `jax.vmap` over the shard axis runs the inner policy's pure
+functions per shard with zero changes to them. Delegating properties
+(`ptr`, `owner`, `clock`, ... — each (S, ...)-stacked) keep the oracle
+assertions and telemetry reductions shape-generic.
+
+Per-shard clocks. Each shard keeps its own logical clock and only ticks it
+on rounds where ITS cohort committed: a shard whose cohort fully departed
+is a relay no-op (the zero-participant contract from the participation
+work, applied per shard) — no merge, no aging, no clock tick. Uploads are
+therefore stamped with their OWNER's shard clock (`stamp_now` /
+`host_stamps`), keeping `age = clock − stamp` a within-shard quantity.
+
+Gossip. Every `gossip_every`-th merge (counted by the global `merges`
+counter, which advances only on rounds that commit), the shards exchange
+prototypes: the per-class weighted mean of THIS round's per-shard sums,
+Σ_s sum_s / max(Σ_s cnt_s, 1) — the cheap O(C·d') merge the per-class
+layout was chosen for. Empty shards contribute zero weight (no 0/0 NaN),
+inactive shards do not receive (they are frozen, see above), and classes
+with zero global mass fall back to each shard's own merge. With S=1 the
+gossip mean IS the single-relay merge, which makes `sharded:<inner>,1`
+bit-identical to the unsharded policy — the compatibility anchor the
+equivalence tests pin.
+
+Engine coupling happens through the two optional base hooks:
+`reduce_uploads` segments the per-upload prototype contributions into
+per-shard partial sums (so `merge_round` receives a ProtoState with
+leading (S,) leaves), and `stamp_now` stamps each upload with its shard's
+clock. Eviction (`evict_owners`, driven by the streaming cohort table in
+repro.sim.population) is vmapped straight onto the inner policy.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import prototypes
+from repro.relay import base, flat, placement
+from repro.types import CollabConfig
+
+
+def shard_of(client_id, n_shards: int):
+    """Deterministic shard assignment: a 32-bit integer mix (murmur-style
+    avalanche) mod S. Pure function of the id — a client's shard is stable
+    for its whole lifetime, across sessions, engines and restarts."""
+    x = jnp.asarray(client_id).astype(jnp.uint32)
+    x = (x ^ (x >> 16)) * jnp.uint32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return (x % jnp.uint32(max(1, n_shards))).astype(jnp.int32)
+
+
+class ShardedRelayState(NamedTuple):
+    """Inner policy state stacked along a leading (S,) shard axis, plus a
+    global merge counter (the gossip cadence clock). The properties expose
+    the stacked inner leaves so shape-generic consumers (oracle asserts,
+    telemetry, history snapshots) see the familiar field names."""
+    shards: Any               # inner state; every leaf (S, ...)
+    merges: jax.Array         # () int32: merges performed (any shard)
+
+    # -- delegating views over the stacked inner state ---------------------
+    @property
+    def obs(self):
+        return self.shards.obs
+
+    @property
+    def valid(self):
+        return self.shards.valid
+
+    @property
+    def owner(self):
+        return self.shards.owner
+
+    @property
+    def ptr(self):
+        return self.shards.ptr
+
+    @property
+    def global_protos(self):
+        return self.shards.global_protos
+
+    @property
+    def valid_g(self):
+        return self.shards.valid_g
+
+    @property
+    def mean_logits(self):
+        return self.shards.mean_logits
+
+    @property
+    def stamp(self):
+        return self.shards.stamp
+
+    @property
+    def clock(self):
+        return self.shards.clock          # (S,) per-shard clocks
+
+    @property
+    def age(self):
+        return self.shards.age            # AttributeError when inner has none
+
+    @property
+    def n_shards(self) -> int:
+        return self.shards.owner.shape[0]
+
+
+def shard_view(state: ShardedRelayState, s):
+    """One shard's inner state ((s) may be traced — a dynamic gather)."""
+    return jax.tree.map(lambda leaf: leaf[s], state.shards)
+
+
+@dataclass(frozen=True)
+class ShardedRelay(base.RelayPolicy):
+    """S inner relays + hash routing + periodic prototype gossip."""
+    inner: base.RelayPolicy = field(default_factory=flat.FlatRelay)
+    shards: int = 1
+    gossip_every: int = 1
+    name: str = "sharded"
+
+    def __post_init__(self):
+        if self.shards < 1:
+            raise ValueError("sharded relay needs at least one shard")
+        if self.gossip_every < 1:
+            raise ValueError("gossip_every must be >= 1")
+        if isinstance(self.inner, ShardedRelay):
+            raise ValueError("sharded relay cannot nest another sharded relay")
+
+    # -- contract ----------------------------------------------------------
+    def init_state(self, ccfg: CollabConfig, d_feature: int, seed: int = 0,
+                   capacity: Optional[int] = None,
+                   n_clients: int = 2) -> ShardedRelayState:
+        """Every shard starts from the SAME Algorithm-1 init: the random
+        initial prototypes are the common anchor that aligns feature
+        spaces, and sharing it across shards keeps cross-shard gossip
+        meaningful from the first exchange. `capacity` is PER SHARD (the
+        default sizes by the bounded cohort, never the population)."""
+        one = self.inner.init_state(ccfg, d_feature, seed, capacity,
+                                    n_clients)
+        stacked = jax.tree.map(
+            lambda leaf: jnp.stack([leaf] * self.shards), one)
+        return ShardedRelayState(shards=stacked,
+                                 merges=jnp.zeros((), jnp.int32))
+
+    def append(self, state, obs_rows, valid_rows, owner_rows, row_mask=None,
+               stamp_rows=None):
+        k = owner_rows.shape[0]
+        if row_mask is None:
+            row_mask = jnp.ones((k,), bool)
+        row_shard = shard_of(owner_rows, self.shards)            # (k,)
+
+        def one(shard_state, s):
+            return self.inner.append(shard_state, obs_rows, valid_rows,
+                                     owner_rows, row_mask & (row_shard == s),
+                                     stamp_rows)
+
+        new = jax.vmap(one)(state.shards,
+                            jnp.arange(self.shards, dtype=jnp.int32))
+        return state._replace(shards=new)
+
+    def sample_teacher(self, state, client_id, m_down: int, key):
+        """Downlink = the client's OWN shard only (that is the scaling
+        point: a download touches cap-per-shard slots, not S·cap)."""
+        s = shard_of(client_id, self.shards)
+        return self.inner.sample_teacher(shard_view(state, s), client_id,
+                                         m_down, key)
+
+    def reduce_uploads(self, psum, pcnt, w, owners):
+        """Per-shard partial sums: ProtoState with (S, C, ...) / (S, C)
+        leaves. S=1 reproduces the engines' builtin mask-weighted sum
+        op-for-op (the bit-compatibility anchor)."""
+        if self.shards == 1:
+            wf = w.reshape((-1,) + (1,) * (psum.ndim - 1))
+            return prototypes.ProtoState(
+                jnp.sum(psum * wf, axis=0)[None],
+                jnp.sum(pcnt * w[:, None], axis=0)[None])
+        oh = (shard_of(owners, self.shards)[:, None]
+              == jnp.arange(self.shards, dtype=jnp.int32)[None, :])
+        wsh = w[:, None] * oh.astype(w.dtype)                    # (k, S)
+        return prototypes.ProtoState(
+            jnp.einsum("ks,kcd->scd", wsh, psum.astype(jnp.float32)),
+            jnp.einsum("ks,kc->sc", wsh, pcnt.astype(jnp.float32)))
+
+    def merge_round(self, state, proto, logit=None):
+        """Per-shard merge with a per-shard no-op guarantee, then periodic
+        gossip. `proto`/`logit` carry leading (S,) axes (reduce_uploads).
+
+        A shard is ACTIVE this round iff it received any prototype mass;
+        inactive shards (cohort departed, or simply quiet) are frozen leaf
+        for leaf — no prototype recompute, no aging, no clock tick — the
+        zero-participant contract applied per shard. Gossip replaces the
+        active shards' prototypes with the cross-shard per-class weighted
+        mean of this round's sums; empty shards contribute zero weight, so
+        a 0/0 NaN cannot arise, and zero-mass classes fall back to the
+        shard's own merge."""
+        S = self.shards
+        active = jnp.sum(proto.count, axis=tuple(range(1, proto.count.ndim)),
+                         ) > 0                                    # (S,)
+        if logit is None:
+            merged = jax.vmap(lambda st, p: self.inner.merge_round(st, p))(
+                state.shards, proto)
+        else:
+            merged = jax.vmap(self.inner.merge_round)(state.shards, proto,
+                                                      logit)
+        do_gossip = (state.merges + 1) % self.gossip_every == 0
+        apply = active & do_gossip                                # (S,)
+        gcnt = jnp.sum(proto.count, axis=0)                       # (C,)
+        gmean = jnp.sum(proto.sum, axis=0) / jnp.maximum(gcnt, 1.0)[:, None]
+        merged = merged._replace(
+            global_protos=jnp.where(
+                apply[:, None, None] & (gcnt > 0)[None, :, None],
+                gmean[None], merged.global_protos),
+            valid_g=jnp.where(apply[:, None], (gcnt > 0)[None],
+                              merged.valid_g))
+        if logit is not None:
+            lcnt = jnp.sum(logit.count, axis=0)
+            lmean = (jnp.sum(logit.sum, axis=0)
+                     / jnp.maximum(lcnt, 1.0)[:, None])
+            merged = merged._replace(mean_logits=jnp.where(
+                apply[:, None, None] & (lcnt > 0)[None, :, None],
+                lmean[None], merged.mean_logits))
+        keep = jax.tree.map(
+            lambda new, old: jnp.where(
+                active.reshape((S,) + (1,) * (new.ndim - 1)), new, old),
+            merged, state.shards)
+        return ShardedRelayState(shards=keep, merges=state.merges + 1)
+
+    def evict_owners(self, state, owners):
+        """LRU-evicted owners leave every shard (their rows only ever lived
+        in their hash shard; elsewhere this is a no-op match)."""
+        new = jax.vmap(lambda st: self.inner.evict_owners(st, owners))(
+            state.shards)
+        return state._replace(shards=new)
+
+    # -- clock plumbing (per-shard clocks; see module docstring) -----------
+    def stamp_now(self, state, owners):
+        return state.clock[shard_of(owners, self.shards)].astype(jnp.int32)
+
+    def host_stamps(self, state, owners) -> np.ndarray:
+        clocks = np.asarray(state.clock)
+        s = np.asarray(shard_of(np.asarray(owners, np.int32), self.shards))
+        return clocks[s].astype(np.int64)
+
+    # -- placement / introspection -----------------------------------------
+    def out_spec(self, state):
+        """The shard axis is a STATE axis, not a client axis: every client
+        must reach its own shard for downloads and the merge walks all
+        shards, so the whole stacked state is REPLICATED (sharding it over
+        a client mesh would put most clients' shard on a remote device)."""
+        return placement.like(state, placement.REPLICATED)
+
+    def debug_entries(self, state):
+        out = []
+        for s in range(self.shards):
+            view = jax.tree.map(lambda leaf: leaf[s], state.shards)
+            for e in self.inner.debug_entries(view):
+                out.append({**e, "shard": s})
+        return out

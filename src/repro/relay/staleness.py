@@ -143,6 +143,9 @@ class StalenessRelay(base.RelayPolicy):
         return state._replace(
             age=jnp.where(live, state.clock - state.stamp, state.age))
 
+    def evict_owners(self, state, owners):
+        return flat.evict_slots(state, owners)   # also resets age (shared)
+
     def out_spec(self, state):
         """Placement declaration (relay/placement.py): same shared flat
         ring as FlatRelay — the per-slot `age` column is indexed by ring

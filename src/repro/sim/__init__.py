@@ -12,3 +12,6 @@ from repro.sim.clocks import (ClockModel, HomogeneousClock,  # noqa: F401
                               LognormalClock, PeriodicClock,
                               PeriodicSyncClock,
                               get_clock, get_download_clock)
+from repro.sim.population import (FREE_SEAT, CohortTable,  # noqa: F401
+                                  RoundView, StreamingPopulation,
+                                  get_arrivals)

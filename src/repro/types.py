@@ -212,6 +212,7 @@ class FleetConfig:
     clock: Any = None                   # upload ClockModel spec | instance
     download_clock: Any = None          # download ClockModel spec | instance
     mesh: Any = None                    # jax Mesh with a client axis, or None
+    arrivals: Any = None                # streaming-population spec | instance
 
 
 def resolve_fleet(fleet=None, **legacy) -> FleetConfig:

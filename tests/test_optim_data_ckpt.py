@@ -94,3 +94,35 @@ def test_checkpoint_roundtrip(tmp_path):
     back = load_pytree(path, template)
     for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_mid_string_npz_in_path(tmp_path):
+    """Only a TRAILING .npz is the extension: a run directory named e.g.
+    `sweep.npz_v2` must not be truncated into a sibling path."""
+    import pytest
+    run_dir = os.path.join(tmp_path, "sweep.npz_v2")
+    path = os.path.join(run_dir, "ck.npz")
+    tree = {"w": jnp.arange(4.0)}
+    save_pytree(path, tree, step=3)
+    assert os.path.exists(os.path.join(run_dir, "ck.npz"))
+    assert os.path.exists(os.path.join(run_dir, "ck.json"))
+    back = load_pytree(path, jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree))
+    np.testing.assert_array_equal(np.asarray(back["w"]),
+                                  np.asarray(tree["w"]))
+    # extensionless paths gain the suffix instead of losing characters
+    save_pytree(os.path.join(run_dir, "plain"), tree)
+    assert os.path.exists(os.path.join(run_dir, "plain.npz"))
+    with pytest.raises(KeyError):
+        # template structure must match what was stored
+        load_pytree(path, {"missing": jax.ShapeDtypeStruct((4,),
+                                                           jnp.float32)})
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    import pytest
+    path = os.path.join(tmp_path, "ck.npz")
+    save_pytree(path, {"w": jnp.zeros((2, 3))})
+    bad = {"w": jax.ShapeDtypeStruct((3, 2), jnp.float32)}
+    with pytest.raises(ValueError, match="does not match template shape"):
+        load_pytree(path, bad)

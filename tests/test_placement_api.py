@@ -4,14 +4,14 @@ and re-export deprecation shims.
 Pins the contracts the placement redesign introduced: every relay-side
 state kind declares its placement (`out_spec`), `resolve` turns those
 declarations into NamedShardings, `exchange` is a no-op off-mesh, the
-sequential oracle rejects a mesh with an error that says why, and both
-the legacy trainer kwargs and the `repro.core.server` re-export warn —
-tier-1 runs with `repro:`-prefixed DeprecationWarnings as errors
-(pyproject.toml), so these pytest.warns tests are the ONLY sanctioned
-callers of the shims.
+sequential oracle rejects a mesh with an error that says why, and the
+legacy trainer kwargs warn — tier-1 runs with `repro:`-prefixed
+DeprecationWarnings as errors (pyproject.toml), so these pytest.warns
+tests are the ONLY sanctioned callers of the shims. (The PR-6
+`repro.core.server` re-export shim served its one release and is gone;
+importing it is now a plain ModuleNotFoundError.)
 """
 import importlib
-import sys
 import warnings
 
 import jax
@@ -153,20 +153,15 @@ def test_resolve_fleet_passthrough_and_fold():
     assert g.participation == "uniform_k:2" and g.mesh is None
 
 
-def test_core_server_shim_warns_and_reexports():
-    sys.modules.pop("repro.core.server", None)
-    with pytest.warns(DeprecationWarning, match="repro:.*re-export shim"):
-        import repro.core.server as server_lib
-    assert server_lib.FlatRelay is relay_lib.FlatRelay
-    assert server_lib.RelayServer is relay_lib.RelayServer
-    assert server_lib.EMPTY_OWNER == relay_lib.EMPTY_OWNER
+def test_core_server_shim_is_retired():
+    with pytest.raises(ModuleNotFoundError):
+        importlib.import_module("repro.core.server")
 
 
 def test_no_internal_module_triggers_shims():
     """Importing the whole package tree must raise no repro: deprecation
     (the filterwarnings=error line in pyproject only covers test runs;
     this pins it for plain imports too)."""
-    sys.modules.pop("repro.core.server", None)
     with warnings.catch_warnings():
         warnings.simplefilter("error", DeprecationWarning)
         for m in ("repro.core.vec_collab", "repro.core.collab",

@@ -1,0 +1,371 @@
+"""Population-scale relay: cohort shards + streaming arrivals.
+
+Tentpole invariants (src/repro/relay/shards.py, src/repro/sim/population.py):
+
+  - seq/vec equivalence holds across the sharded policy matrix
+    S ∈ {1, 4} × {flat, per_class, staleness} — the sequential oracle
+    stays the bit-exact ring-bookkeeping reference with shards on;
+  - S=1 sharding is BIT-identical to the unsharded policy (the
+    compatibility anchor: reduce_uploads' S=1 special case and the
+    single-shard gossip mean reproduce the plain engines op-for-op);
+  - streaming arrivals (unbounded external ids, bounded seat table, LRU
+    owner eviction) evolve identically through both engines, with real
+    evictions and admission drops exercised;
+  - a shard whose cohort went quiet is a relay no-op (frozen leaves, no
+    clock tick) and cross-shard gossip never divides 0/0;
+  - eviction invalidates exactly the evicted owners' slots in every
+    policy layout, leaving ptr/clock/billing untouched.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from oracles import run_matched
+from repro import relay as relay_lib
+from repro.core import client as client_lib, collab, vec_collab
+from repro.data import partition, synthetic
+from repro.models import mlp
+from repro.obs import metrics as obs_metrics
+from repro.relay import shards
+from repro.sim import population
+from repro.types import CollabConfig, FleetConfig, TrainConfig
+
+SPEC = client_lib.ClientSpec(
+    apply=mlp.apply,
+    head=lambda p: (p["head_w"], p["head_b"]))
+
+INNERS = ["flat", "per_class", "staleness"]
+
+
+def _build(engine, fleet, mode="cors", n_clients=4, n=256, seed=0):
+    # n must divide n_clients: the vectorized engine trims every client's
+    # data to the shortest partition, so unequal splits break bit-parity.
+    x, y = synthetic.class_images(n, seed=0, noise=0.4)
+    tx, ty = synthetic.class_images(128, seed=9, noise=0.4)
+    parts = partition.uniform_split(x, y, n_clients, seed=1)
+    ccfg = CollabConfig(mode=mode, num_classes=10, d_feature=84,
+                        lambda_kd=2.0,
+                        lambda_disc=1.0 if mode == "cors" else 0.0)
+    tcfg = TrainConfig(batch_size=16)
+    params = [mlp.init_mlp(k)
+              for k in jax.random.split(jax.random.PRNGKey(seed), n_clients)]
+    cls = (collab.CollabTrainer if engine == "seq"
+           else vec_collab.VectorizedCollabTrainer)
+    return cls([SPEC] * n_clients, params, parts, (tx, ty), ccfg, tcfg,
+               seed=seed, fleet=fleet)
+
+
+# ---------------------------------------------------------------------------
+# tentpole: seq/vec equivalence across the sharded policy matrix
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("inner", INNERS)
+@pytest.mark.parametrize("S", [1, 4])
+def test_sharded_seq_vec_equivalence(inner, S):
+    fleet = FleetConfig(policy=f"sharded:{inner},{S}",
+                        participation="uniform_k:2")
+    run_matched(_build("seq", fleet), _build("vec", fleet), rounds=2)
+
+
+def test_sharded_fd_mode_logit_reduction():
+    """FD mode routes logit protos through reduce_uploads too."""
+    fleet = FleetConfig(policy="sharded:flat,2", participation="uniform_k:2")
+    run_matched(_build("seq", fleet, mode="fd"),
+                _build("vec", fleet, mode="fd"), rounds=2)
+
+
+@pytest.mark.parametrize("inner", INNERS)
+def test_single_shard_is_bit_identical_to_plain(inner):
+    """sharded:<inner>,1 must evolve BYTE-identical state to <inner>: the
+    S=1 reduce_uploads special case mirrors the engines' builtin sum and
+    the single-shard gossip mean IS the inner merge."""
+    fl = lambda p: FleetConfig(policy=p, participation="uniform_k:2")
+    plain = _build("vec", fl(inner))
+    one = _build("vec", fl(f"sharded:{inner},1"))
+    for _ in range(3):
+        plain.run_round()
+        one.run_round()
+    ps, ss = plain.relay_state, one.relay_state
+    fields = ["obs", "valid", "owner", "ptr", "global_protos", "valid_g",
+              "mean_logits", "stamp", "clock"]
+    if hasattr(ps, "age"):
+        fields.append("age")
+    for f in fields:
+        np.testing.assert_array_equal(np.asarray(getattr(ps, f)),
+                                      np.asarray(getattr(ss, f))[0],
+                                      err_msg=f)
+
+
+# ---------------------------------------------------------------------------
+# tentpole: streaming arrivals through both engines
+# ---------------------------------------------------------------------------
+def test_streaming_seq_vec_equivalence_with_evictions():
+    """Small population over few seats: departures, LRU evictions and
+    admission drops all occur, and the engines agree every round (exact
+    ring bookkeeping, commit lists, ledgers)."""
+    fleet = FleetConfig(policy="sharded:flat,2",
+                        arrivals="stream:2,1.5,0.3,7,0")
+    seq = _build("seq", fleet, n_clients=3, n=192)
+    vec = _build("vec", fleet, n_clients=3, n=192)
+    run_matched(seq, vec, rounds=8)
+    evictions = sum(seq._cohort.round(r).evicted.size for r in range(8))
+    assert evictions > 0, "spec no longer exercises LRU eviction"
+    assert seq._cohort.dropped > 0, "spec no longer exercises admission drop"
+    # billing conservation: every round bills exactly the cohort's
+    # participants — seat churn never double-bills or leaks
+    ccfg = seq.ccfg
+    per_client = (ccfg.m_up + 1) * ccfg.num_classes * ccfg.d_feature
+    for r, rec in enumerate(seq.history):
+        assert rec["comm_up"] == per_client * int(
+            seq._cohort.round(r).mask.sum())
+
+
+def test_streaming_unsharded_policy():
+    """Arrivals do not require shards: a plain policy evicts correctly."""
+    fleet = FleetConfig(policy="staleness", arrivals="stream:2,2.0,0.4,5,1")
+    seq = _build("seq", fleet, n_clients=3, n=192)
+    vec = _build("vec", fleet, n_clients=3, n=192)
+    run_matched(seq, vec, rounds=6)
+
+
+def test_streaming_round_step_compiles_once():
+    """Seat churn must not retrace: external ids are a traced argument."""
+    fleet = FleetConfig(policy="sharded:flat,2",
+                        arrivals="stream:2,1.5,0.3,7,0")
+    vec = _build("vec", fleet, n_clients=3, n=192)
+    for _ in range(6):
+        vec.run_round()
+    assert vec._round_step._cache_size() == 1
+
+
+def test_streaming_empty_cohort_rounds_are_relay_noops():
+    """rate=0: nobody ever arrives, every round has zero participants, and
+    the relay state stays untouched in both engines."""
+    fleet = FleetConfig(policy="sharded:flat,2", arrivals="stream:2,0,0.5")
+    for engine in ("seq", "vec"):
+        tr = _build(engine, fleet, n_clients=2, n=128)
+        state0 = jax.tree.map(
+            np.asarray, tr.server.state if engine == "seq"
+            else tr.relay_state)
+        for _ in range(2):
+            rec = tr.run_round()
+            assert rec["participants"] == []
+            assert rec["comm_up"] == rec["comm_down"] == 0.0
+        state1 = (tr.server.state if engine == "seq" else tr.relay_state)
+        jax.tree.map(np.testing.assert_array_equal, state0,
+                     jax.tree.map(np.asarray, state1))
+
+
+def test_streaming_composition_guards():
+    """Unsupported compositions are rejected at construction, in BOTH
+    engines, with the same reasons (re-filed as ROADMAP follow-ons)."""
+    bad = [
+        dict(policy="flat", arrivals="stream:2", participation="uniform_k:2"),
+        dict(policy="flat", arrivals="stream:2", clock="lognormal:2"),
+        dict(policy="flat", arrivals="stream:2", download_clock="lognormal:1"),
+    ]
+    for engine in ("seq", "vec"):
+        for kw in bad:
+            with pytest.raises(ValueError):
+                _build(engine, FleetConfig(**kw), n_clients=2, n=128)
+        with pytest.raises(ValueError):
+            _build(engine, FleetConfig(policy="flat", arrivals="stream:2"),
+                   mode="il", n_clients=2, n=128)
+
+
+# ---------------------------------------------------------------------------
+# sharded-policy unit mechanics
+# ---------------------------------------------------------------------------
+def _ccfg(C=4, d=3):
+    return CollabConfig(num_classes=C, d_feature=d, m_down=1)
+
+
+def _mk(S, inner=None, **kw):
+    pol = shards.ShardedRelay(inner=inner or relay_lib.FlatRelay(),
+                              shards=S, **kw)
+    return pol, pol.init_state(_ccfg(), 3, seed=0, capacity=5)
+
+
+def _ids_on_distinct_shards(S, want=2):
+    """First `want` client ids that land on pairwise-distinct shards."""
+    out, seen = [], set()
+    for i in range(1000):
+        s = int(shards.shard_of(i, S))
+        if s not in seen:
+            seen.add(s)
+            out.append(i)
+        if len(out) == want:
+            return out
+    raise AssertionError("hash did not cover the shards")
+
+
+def test_quiet_shards_are_frozen_and_gossip_is_nan_free():
+    """One committing cohort: only its shard merges/ticks; the cross-shard
+    gossip mean stays finite although 3 of 4 shards contributed nothing."""
+    pol, st = _mk(4)
+    C, d = 4, 3
+    owner = _ids_on_distinct_shards(4, want=1)[0]
+    s0 = int(shards.shard_of(owner, 4))
+    proto = pol.reduce_uploads(jnp.ones((1, C, d)), jnp.ones((1, C)),
+                               jnp.ones((1,)), jnp.asarray([owner], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(proto.count).sum(axis=1) > 0,
+                                  np.arange(4) == s0)
+    st2 = pol.merge_round(st, proto)
+    clocks = np.asarray(st2.clock)
+    assert clocks[s0] == 1 and (np.delete(clocks, s0) == 0).all()
+    assert np.isfinite(np.asarray(st2.global_protos)).all()
+    # quiet shards are bit-frozen leaf for leaf
+    for leaf0, leaf1 in zip(jax.tree.leaves(st.shards),
+                            jax.tree.leaves(st2.shards)):
+        for s in range(4):
+            if s != s0:
+                np.testing.assert_array_equal(np.asarray(leaf0)[s],
+                                              np.asarray(leaf1)[s])
+    assert int(st2.merges) == 1
+
+
+def test_gossip_cadence_and_cross_shard_mean():
+    """gossip_every=2: the first merge keeps per-shard means, the second
+    replaces active shards' prototypes with the shared cross-shard mean."""
+    pol, st = _mk(2, gossip_every=2)
+    C, d = 4, 3
+    a, b = _ids_on_distinct_shards(2)
+    owners = jnp.asarray([a, b], jnp.int32)
+    psum = jnp.stack([jnp.full((C, d), 2.0), jnp.full((C, d), 6.0)])
+    proto = pol.reduce_uploads(psum, jnp.ones((2, C)), jnp.ones((2,)),
+                               owners)
+    st1 = pol.merge_round(st, proto)
+    g1 = np.asarray(st1.global_protos)
+    sa, sb = int(shards.shard_of(a, 2)), int(shards.shard_of(b, 2))
+    np.testing.assert_allclose(g1[sa], 2.0)      # own means, no gossip yet
+    np.testing.assert_allclose(g1[sb], 6.0)
+    st2 = pol.merge_round(st1, proto)            # merge #2 -> gossip
+    g2 = np.asarray(st2.global_protos)
+    np.testing.assert_allclose(g2[sa], 4.0)      # (2 + 6) / 2
+    np.testing.assert_allclose(g2[sb], 4.0)
+
+
+def test_append_routes_rows_to_owner_shard_only():
+    pol, st = _mk(4)
+    a, b = _ids_on_distinct_shards(4)
+    st2 = pol.append(st, jnp.ones((2, 4, 3)), jnp.ones((2, 4), bool),
+                     jnp.asarray([a, b], jnp.int32))
+    owner = np.asarray(st2.owner)                # (S, cap)
+    for cid in (a, b):
+        s = int(shards.shard_of(cid, 4))
+        assert (owner[s] == cid).sum() == 1
+        assert (np.delete(owner, s, axis=0) == cid).sum() == 0
+
+
+@pytest.mark.parametrize("spec", INNERS)
+def test_evict_owners_surgical_across_layouts(spec):
+    """Eviction removes exactly the evicted owners' slots: other owners,
+    seeds, ptr and clock are bit-untouched — in every ring layout."""
+    pol = relay_lib.get_policy(spec)
+    st = pol.init_state(_ccfg(), 3, seed=0, capacity=6)
+    st = pol.append(st, jnp.ones((2, 4, 3)), jnp.ones((2, 4), bool),
+                    jnp.asarray([5, 9], jnp.int32))
+    st2 = pol.evict_owners(st, jnp.asarray([5], jnp.int32))
+    o1, o2 = np.asarray(st.owner), np.asarray(st2.owner)
+    v1, v2 = np.asarray(st.valid), np.asarray(st2.valid)
+    hit = o1 == 5
+    assert hit.any()
+    assert (o2[hit] == relay_lib.EMPTY_OWNER).all()
+    np.testing.assert_array_equal(o2[~hit], o1[~hit])
+    # valid layout: (cap, C) for flat/staleness, owner-shaped for per_class
+    vhit = (hit if v1.shape == o1.shape
+            else np.broadcast_to(hit[:, None], v1.shape))
+    assert not v2[vhit].any()
+    np.testing.assert_array_equal(v2[~vhit], v1[~vhit])
+    np.testing.assert_array_equal(np.asarray(st.ptr), np.asarray(st2.ptr))
+    np.testing.assert_array_equal(np.asarray(st.clock),
+                                  np.asarray(st2.clock))
+    assert (o2 == 9).sum() == (o1 == 9).sum()
+
+
+def test_sharded_evict_hits_every_shard():
+    pol, st = _mk(2)
+    a, b = _ids_on_distinct_shards(2)
+    st = pol.append(st, jnp.ones((2, 4, 3)), jnp.ones((2, 4), bool),
+                    jnp.asarray([a, b], jnp.int32))
+    st2 = pol.evict_owners(st, jnp.asarray([a, b], jnp.int32))
+    owner = np.asarray(st2.owner)
+    assert (owner == a).sum() == 0 and (owner == b).sum() == 0
+
+
+# ---------------------------------------------------------------------------
+# spec parsing, constants, summaries
+# ---------------------------------------------------------------------------
+def test_sharded_policy_spec_parsing_and_validation():
+    p = relay_lib.get_policy("sharded:staleness,4,2")
+    assert isinstance(p, shards.ShardedRelay)
+    assert isinstance(p.inner, relay_lib.StalenessRelay)
+    assert p.shards == 4 and p.gossip_every == 2
+    assert isinstance(relay_lib.get_policy("sharded").inner,
+                      relay_lib.FlatRelay)
+    with pytest.raises(ValueError):
+        shards.ShardedRelay(shards=0)
+    with pytest.raises(ValueError):
+        shards.ShardedRelay(gossip_every=0)
+    with pytest.raises(ValueError):
+        shards.ShardedRelay(inner=shards.ShardedRelay())
+
+
+def test_arrival_spec_parsing_and_validation():
+    pop = population.get_arrivals("stream:3,1.5,0.2,1000,7")
+    assert (pop.k, pop.rate, pop.p_leave, pop.population, pop.seed) == \
+        (3, 1.5, 0.2, 1000, 7)
+    assert population.get_arrivals(None) is None
+    assert population.get_arrivals(pop) is pop
+    with pytest.raises(ValueError):
+        population.StreamingPopulation(k=0)
+    with pytest.raises(ValueError):
+        population.StreamingPopulation(p_leave=1.5)
+    with pytest.raises(ValueError):
+        population.StreamingPopulation(population=0)
+    with pytest.raises(ValueError):
+        population.get_arrivals("nope:1")
+
+
+def test_free_seat_matches_empty_owner_sentinel():
+    """A free seat's id must never collide with a live ring owner."""
+    assert population.FREE_SEAT == relay_lib.EMPTY_OWNER
+
+
+def test_relay_summary_handles_sharded_and_external_ids():
+    """Telemetry reductions are shard- and id-space-generic: occupancy and
+    diversity sum across shards, and external ids far beyond n_clients
+    count correctly (the sweep's owner-diversity surface)."""
+    pol, st = _mk(2)
+    big_ids = [10_000_019, 10_000_033]           # way outside any seat range
+    st = pol.append(st, jnp.ones((2, 4, 3)), jnp.ones((2, 4), bool),
+                    jnp.asarray(big_ids, jnp.int32))
+    occ, fill, div, hist = obs_metrics.relay_summary(st, n_clients=2)
+    seeds = 2 * 1                                # one seed slot per shard
+    assert int(occ) == seeds + 2
+    assert int(div) == 2
+    per = obs_metrics.shard_summary(st)
+    assert len(per["occupancy"]) == 2
+    assert sum(per["occupancy"]) == int(occ)
+    assert sum(per["owner_diversity"]) == 2
+    # unsharded states report as one shard
+    flat_pol = relay_lib.FlatRelay()
+    fst = flat_pol.init_state(_ccfg(), 3, seed=0, capacity=5)
+    one = obs_metrics.shard_summary(fst)
+    assert len(one["occupancy"]) == 1
+
+
+def test_cohort_table_determinism_and_memory():
+    pop = population.StreamingPopulation(k=2, rate=1.5, p_leave=0.3,
+                                         population=50, seed=4)
+    t1, t2 = pop.table(4), pop.table(4)
+    for r in range(12):
+        a, b = t1.round(r), t2.round(r)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(x, y)
+    # replay from scratch out of order agrees too
+    t3 = pop.table(4)
+    v = t3.round(7)
+    for x, y in zip(t1.round(7), v):
+        np.testing.assert_array_equal(x, y)
+    assert t1.nbytes() == t2.nbytes() > 0

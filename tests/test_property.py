@@ -303,3 +303,107 @@ def test_staleness_weights_normalize(cap, lam, seed):
         for j in inpool:
             if ages[i] < ages[j]:
                 assert w[i] >= w[j] - 1e-7
+
+
+@given(seed=st.integers(0, 2**31 - 1), seats=st.integers(1, 6),
+       k=st.integers(1, 4), rate=st.floats(0.0, 4.0),
+       p_leave=st.floats(0.0, 1.0), population=st.integers(1, 60),
+       rounds=st.integers(1, 15))
+@settings(**SET)
+def test_cohort_table_invariants(seed, seats, k, rate, p_leave, population,
+                                 rounds):
+    """Seat-table invariants (sim/population.py) for ANY spec: only active
+    seats participate (k-of-active), every seated id holds exactly one
+    seat and lies in the id space, a free seat is never active, and an
+    evicted owner was previously seated. (An evicted id may legally be
+    re-seated within the SAME round — a small id space can re-draw it as
+    a fresh arrival — so "gone from the table" is not invariant.)"""
+    from repro.sim import population as pop_lib
+    pop = pop_lib.StreamingPopulation(k=k, rate=rate, p_leave=p_leave,
+                                      population=population, seed=seed)
+    t = pop.table(seats)
+    seated_ever = set()
+    for r in range(rounds):
+        v = t.round(r)
+        assert not (v.mask & ~v.active).any()
+        assert int(v.mask.sum()) == min(k, int(v.active.sum()))
+        assert not v.active[v.seat_ids == pop_lib.FREE_SEAT].any()
+        occ = v.seat_ids[v.seat_ids != pop_lib.FREE_SEAT]
+        assert len(set(occ.tolist())) == occ.size
+        assert ((occ >= 0) & (occ < population)).all()
+        ev = v.evicted.tolist()
+        assert len(set(ev)) == len(ev)            # each owner evicted once
+        for e in ev:
+            assert e in seated_ever
+        seated_ever.update(occ.tolist())
+
+
+@given(seed=st.integers(0, 2**31 - 1), seats=st.integers(1, 5),
+       k=st.integers(1, 4), rate=st.floats(0.0, 5.0),
+       population=st.integers(1, 60), rounds=st.integers(1, 15))
+@settings(**SET)
+def test_lru_never_evicts_an_active_owner(seed, seats, k, rate, population,
+                                          rounds):
+    """Eviction targets only DEPARTED seats: with p_leave=0 nobody ever
+    departs, so however hard arrivals press on a full table, no owner is
+    ever evicted — excess arrivals are dropped (admission control)."""
+    from repro.sim import population as pop_lib
+    pop = pop_lib.StreamingPopulation(k=k, rate=rate, p_leave=0.0,
+                                      population=population, seed=seed)
+    t = pop.table(seats)
+    for r in range(rounds):
+        assert t.round(r).evicted.size == 0
+    assert t.dropped >= 0
+
+
+@given(policy=st.sampled_from(["flat", "per_class", "staleness"]),
+       cap=st.integers(2, 8), k=st.integers(1, 6), n_ids=st.integers(1, 5),
+       seed=st.integers(0, 2**31 - 1))
+@settings(**SET)
+def test_evict_owners_conserves_other_slots(policy, cap, k, n_ids, seed):
+    """Slot conservation under churn, for every ring layout: eviction
+    frees EXACTLY the victims' slots (owner -> EMPTY, valid cleared) and
+    leaves every other slot, the write pointers and the seed slots
+    bit-untouched — billing-neutral bookkeeping."""
+    from repro.types import CollabConfig
+    k = min(k, cap)                               # per-append contract
+    rng = np.random.default_rng(seed)
+    ccfg = CollabConfig(num_classes=3, d_feature=2, m_down=1)
+    pol = relay_lib.get_policy(policy)
+    state = pol.init_state(ccfg, 2, seed=0, capacity=cap)
+    owners = rng.integers(0, n_ids, k).astype(np.int32)
+    state = pol.append(state,
+                       jnp.asarray(rng.normal(size=(k, 3, 2)), jnp.float32),
+                       jnp.ones((k, 3), bool), jnp.asarray(owners))
+    victims = np.unique(
+        rng.integers(0, n_ids, max(1, n_ids // 2)).astype(np.int32))
+    st2 = pol.evict_owners(state, jnp.asarray(victims))
+    o1, o2 = np.asarray(state.owner), np.asarray(st2.owner)
+    hit = np.isin(o1, victims)
+    assert (o2[hit] == relay_lib.EMPTY_OWNER).all()
+    np.testing.assert_array_equal(o2[~hit], o1[~hit])
+    v1, v2 = np.asarray(state.valid), np.asarray(st2.valid)
+    vhit = (hit if v1.shape == o1.shape
+            else np.broadcast_to(hit[:, None], v1.shape))
+    assert not v2[vhit].any()
+    np.testing.assert_array_equal(v2[~vhit], v1[~vhit])
+    np.testing.assert_array_equal(np.asarray(state.ptr), np.asarray(st2.ptr))
+    assert (o2 == relay_lib.SEED_OWNER).sum() == \
+        (o1 == relay_lib.SEED_OWNER).sum()
+
+
+@given(ids=st.lists(st.integers(0, 2**31 - 1), min_size=1, max_size=32),
+       S=st.integers(1, 16))
+@settings(**SET)
+def test_shard_hash_stable_in_range_and_elementwise(ids, S):
+    """shard_of is pure, in-range and elementwise — a client's shard never
+    changes and never depends on its neighbours in the batch, which is
+    what lets seat churn reroute nobody."""
+    from repro.relay import shards
+    batch = jnp.asarray(ids, jnp.int32)
+    a = np.asarray(shards.shard_of(batch, S))
+    assert ((0 <= a) & (a < S)).all()
+    np.testing.assert_array_equal(a, np.asarray(shards.shard_of(batch, S)))
+    one = np.asarray(
+        [int(shards.shard_of(jnp.asarray(i, jnp.int32), S)) for i in ids])
+    np.testing.assert_array_equal(a, one)
